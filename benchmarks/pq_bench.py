@@ -1,0 +1,141 @@
+"""Shared machinery for the priority-queue benchmarks (paper §4).
+
+The paper's benchmark: threads flip a p-coin between add() and
+removeMin(); the structure is pre-warmed with 2000 elements; throughput is
+ops/s.  The batch-world analogue maps *thread count* to *op-batch width*
+per tick: a width-W tick carries the work W threads would submit
+concurrently.
+
+All three queues (pqe = the paper's design, fc = flat-combining analogue,
+par = lock-free-skiplist analogue) share the tick API, so one driver
+measures all of them.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FCPQ, ParallelPQ, PQConfig, init, tick
+from repro.core.config import EMPTY_VAL
+
+WARM_ELEMENTS = 2000     # paper: "inserting 2000 elements ... stable state"
+KEY_HI = 100_000.0
+
+
+def make_cfg(width: int) -> PQConfig:
+    return PQConfig(
+        a_max=width, r_max=width,
+        seq_cap=max(4096, 4 * width),
+        n_buckets=64, bucket_cap=max(64, WARM_ELEMENTS // 16),
+        detach_min=8, detach_max=65536, detach_init=256,
+        halve_threshold=1000, double_threshold=100)
+
+
+IMPLS = {
+    "pqe": (init, tick),
+    "fcskiplist": (FCPQ.init, FCPQ.tick),
+    "lfskiplist": (ParallelPQ.init, ParallelPQ.tick),
+}
+
+
+def _warm(cfg, impl_init, impl_tick, rng):
+    state = impl_init(cfg)
+    keys = rng.uniform(0, KEY_HI, WARM_ELEMENTS).astype(np.float32)
+    for i in range(0, WARM_ELEMENTS, cfg.a_max):
+        chunk = keys[i:i + cfg.a_max]
+        ak = np.full((cfg.a_max,), np.inf, np.float32)
+        av = np.zeros((cfg.a_max,), np.int32)
+        mask = np.zeros((cfg.a_max,), bool)
+        ak[:len(chunk)] = chunk
+        mask[:len(chunk)] = True
+        state, _ = impl_tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
+                             jnp.asarray(mask), jnp.asarray(0))
+    return state
+
+
+def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
+              seed: int = 0, key_dist: str = "uniform") -> Dict[str, float]:
+    """Throughput of one implementation at one width and add-fraction.
+
+    key_dist:
+      * "uniform" — keys uniform over the whole space (worst case for
+        elimination: a fresh add rarely beats the queue minimum);
+      * "des" — discrete-event-simulation style ("hold model"): new keys
+        cluster just above the current minimum, the paper's motivating
+        scheduler workload, where elimination thrives.
+
+    Returns {us_per_tick, mops_per_s, ...stats}.
+    """
+    cfg = make_cfg(width)
+    impl_init, impl_tick = IMPLS[impl]
+    rng = np.random.default_rng(seed)
+    state = _warm(cfg, impl_init, impl_tick, rng)
+
+    n_add = int(round(width * p_add))
+    n_rm = width - n_add
+
+    # pre-generate inputs (host work out of the timed loop)
+    lo = 0.0
+    batches = []
+    for t in range(ticks):
+        ak = np.full((cfg.a_max,), np.inf, np.float32)
+        av = np.arange(cfg.a_max, dtype=np.int32)
+        mask = np.zeros((cfg.a_max,), bool)
+        if key_dist == "des":
+            # advance a virtual clock ~ with the removal rate
+            lo += n_rm * KEY_HI / max(WARM_ELEMENTS, 1)
+            ak[:n_add] = lo + rng.exponential(KEY_HI / WARM_ELEMENTS * 8,
+                                              n_add)
+        else:
+            ak[:n_add] = rng.uniform(0, KEY_HI, n_add)
+        mask[:n_add] = True
+        batches.append((jnp.asarray(ak), jnp.asarray(av),
+                        jnp.asarray(mask)))
+    rmc = jnp.asarray(n_rm, jnp.int32)
+
+    # warmup/compile
+    s2, _ = impl_tick(cfg, state, *batches[0], rmc)
+    jax.block_until_ready(s2)
+
+    t0 = time.perf_counter()
+    for t in range(ticks):
+        state, res = impl_tick(cfg, state, *batches[t], rmc)
+    jax.block_until_ready(state)
+    dt = time.perf_counter() - t0
+
+    out = {
+        "us_per_tick": dt / ticks * 1e6,
+        "mops_per_s": width * ticks / dt / 1e6,
+    }
+    if impl == "pqe":
+        s = state.stats
+        for k in ("add_imm_elim", "add_upc_elim", "add_seq", "add_par",
+                  "rm_seq", "rm_par", "rm_empty", "n_movehead",
+                  "n_chophead", "n_removes"):
+            out[k] = int(getattr(s, k))
+    return out
+
+
+def breakdown(width: int, p_add: float, *, ticks: int = 80,
+              seed: int = 0, key_dist: str = "uniform") -> Dict[str, float]:
+    """Figs. 7–8: fraction of adds/removes served by each path."""
+    r = bench_mix("pqe", width, p_add, ticks=ticks, seed=seed,
+                  key_dist=key_dist)
+    adds = r["add_imm_elim"] + r["add_upc_elim"] + r["add_seq"] + r["add_par"]
+    rms = max(r["n_removes"], 1)
+    elim = r["add_imm_elim"] + r["add_upc_elim"]
+    return {
+        "add_eliminated": elim / max(adds, 1),
+        "add_parallel": r["add_par"] / max(adds, 1),
+        "add_server": r["add_seq"] / max(adds, 1),
+        "rm_eliminated": elim / rms,
+        "rm_server": (r["rm_seq"] + r["rm_par"]) / rms,
+        "movehead_per_rm": r["n_movehead"] / rms,
+        "chophead_per_rm": r["n_chophead"] / rms,
+        "us_per_tick": r["us_per_tick"],
+    }

@@ -1,0 +1,63 @@
+"""Serving driver: batched requests through the PQ-scheduled engine.
+
+Requests arrive in waves with priorities (SLA classes); the scheduler's
+elimination fast-path admits urgent requests straight into free decode
+slots, while bulk arrivals are combined into the queue.
+
+    PYTHONPATH=src python examples/serve_requests.py
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serving import Request, ServeEngine
+
+
+def main() -> None:
+    cfg = dataclasses.replace(
+        get_config("gemma-2b"), n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=1, head_dim=32, d_ff=512, vocab=512, remat="none")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, n_slots=4, s_max=64)
+    rng = np.random.default_rng(0)
+
+    waves = [
+        [Request(rid=i, priority=float(5 + i), max_new=6)
+         for i in range(6)],                      # bulk batch
+        [Request(rid=100, priority=0.1, max_new=6)],  # urgent (eliminates)
+        [Request(rid=101 + i, priority=float(3 + i), max_new=6)
+         for i in range(4)],
+    ]
+
+    def prompt_fn(req):
+        return rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+
+    completed_order = []
+    seen = set()
+    for step in range(64):
+        if step < len(waves):
+            eng.submit(waves[step])
+        eng.step(prompt_fn)
+        for rid in eng.completed:
+            if rid not in seen:
+                seen.add(rid)
+                completed_order.append(rid)
+        if len(seen) == sum(len(w) for w in waves):
+            break
+
+    print("completion order:", completed_order)
+    print("urgent request 100 finished at position",
+          completed_order.index(100))
+    stats = eng.sched.stats()
+    print("scheduler breakdown:")
+    for k in ("add_imm_elim", "add_upc_elim", "add_seq", "add_par",
+              "rm_seq", "n_movehead"):
+        print(f"  {k:14s} {stats[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Dev sanity check: drive tick() against the heapq oracle with random mixes."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import pqueue as pq
+from repro.core.config import SMALL, PQConfig
+from repro.core.ref_pq import RefPQ
+
+
+def run(cfg, seed, ticks, p_add=0.5, key_hi=1000.0, verbose=False):
+    rng = np.random.default_rng(seed)
+    state = pq.init(cfg)
+    ref = RefPQ()
+    next_val = 0
+    for t in range(ticks):
+        n_add = int(rng.integers(0, cfg.a_max + 1))
+        n_rm = int(rng.integers(0, cfg.r_max + 1))
+        if rng.random() < 0.2:
+            n_rm = 0  # quiet ticks to exercise chopHead
+        # admission control: the structure is statically sized (TPU-resident);
+        # the engine layer never admits beyond capacity. chopHead can move
+        # everything to the parallel part, so bound by par_cap.
+        n_add = min(n_add, max(0, cfg.par_cap - len(ref)))
+        keys = rng.uniform(0, key_hi, size=n_add).astype(np.float32)
+        vals = np.arange(next_val, next_val + n_add, dtype=np.int32)
+        next_val += n_add
+
+        ak = np.full((cfg.a_max,), np.inf, np.float32)
+        av = np.full((cfg.a_max,), -1, np.int32)
+        mask = np.zeros((cfg.a_max,), bool)
+        ak[:n_add] = keys; av[:n_add] = vals; mask[:n_add] = True
+
+        state, res = pq.tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
+                             jnp.asarray(mask), jnp.asarray(n_rm))
+        got_keys = np.asarray(res.rm_keys)[np.asarray(res.rm_served)]
+        exp = ref.tick(keys.tolist(), vals.tolist(), n_rm)
+        exp_keys = np.array([k for k, _ in exp if k != np.inf], np.float32)
+        got_sorted = np.sort(got_keys)
+        exp_sorted = np.sort(exp_keys)
+        if got_sorted.shape != exp_sorted.shape or not np.allclose(got_sorted, exp_sorted):
+            print(f"MISMATCH tick {t}: n_add={n_add} n_rm={n_rm}")
+            print(" got", got_sorted[:20], len(got_sorted))
+            print(" exp", exp_sorted[:20], len(exp_sorted))
+            print(" state seq_len", state.seq_len, "par_count", state.par_count,
+                  "min", state.min_value, "last_seq", state.last_seq)
+            return False
+        # size invariant
+        sz = int(state.seq_len) + int(state.par_count)
+        if sz != len(ref):
+            print(f"SIZE MISMATCH tick {t}: got {sz} exp {len(ref)} "
+                  f"(dropped={int(state.stats.n_dropped)})")
+            return False
+    s = state.stats
+    if verbose:
+        print(f"seed={seed} OK  elim(imm/upc)={int(s.add_imm_elim)}/{int(s.add_upc_elim)} "
+              f"addseq={int(s.add_seq)} addpar={int(s.add_par)} rmseq={int(s.rm_seq)} "
+              f"rmpar={int(s.rm_par)} empty={int(s.rm_empty)} mv={int(s.n_movehead)} "
+              f"chop={int(s.n_chophead)} rebal={int(s.n_rebalance)} spill={int(s.n_spill)} "
+              f"drop={int(s.n_dropped)}")
+    return True
+
+
+if __name__ == "__main__":
+    cfg = SMALL
+    ok = True
+    for seed in range(8):
+        ok &= run(cfg, seed, ticks=60, verbose=True)
+    # tiny config to force overflow/rebalance/spill paths hard
+    tiny = PQConfig(a_max=16, r_max=16, seq_cap=64, n_buckets=4, bucket_cap=16,
+                    detach_min=2, detach_max=32, detach_init=4,
+                    chop_patience=4)
+    for seed in range(8, 16):
+        ok &= run(tiny, seed, ticks=80, verbose=True)
+    print("ALL OK" if ok else "FAILURES")

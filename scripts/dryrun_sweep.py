@@ -1,0 +1,115 @@
+"""Run the full dry-run sweep: every (arch × shape × mesh) cell in its own
+subprocess (device count is locked at first jax init; a crash in one cell
+must not kill the sweep).  Resumable: cells with existing artifacts are
+skipped unless --force.
+
+Usage: python scripts/dryrun_sweep.py [--out artifacts/dryrun]
+           [--timeout 2400] [--only-mesh 16x16|2x16x16] [--archs a,b,...]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ARCHS = ["internvl2-26b", "zamba2-2.7b", "gemma-2b", "mistral-nemo-12b",
+         "gemma2-27b", "phi4-mini-3.8b", "qwen3-moe-235b-a22b",
+         "moonshot-v1-16b-a3b", "xlstm-350m", "whisper-tiny"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SKIPS = {  # full-attention archs skip long_500k (DESIGN.md §5)
+    ("internvl2-26b", "long_500k"), ("gemma-2b", "long_500k"),
+    ("mistral-nemo-12b", "long_500k"), ("gemma2-27b", "long_500k"),
+    ("phi4-mini-3.8b", "long_500k"), ("qwen3-moe-235b-a22b", "long_500k"),
+    ("moonshot-v1-16b-a3b", "long_500k"), ("whisper-tiny", "long_500k"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--only-mesh", default=None)
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = args.archs.split(",") if args.archs else ARCHS
+    shapes = args.shapes.split(",") if args.shapes else SHAPES
+    meshes = [("16x16", False), ("2x16x16", True)]
+    if args.only_mesh:
+        meshes = [m for m in meshes if m[0] == args.only_mesh]
+
+    results = []
+    for mesh_name, multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                cell = f"{arch}__{shape}__{mesh_name}"
+                path = out / f"{cell}.json"
+                if (arch, shape) in SKIPS:
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "SKIP",
+                        "reason": "full attention cannot serve 500k decode "
+                                  "sub-quadratically (DESIGN.md §5)"}))
+                    results.append((cell, "SKIP", 0.0))
+                    print(f"[skip] {cell}")
+                    continue
+                if path.exists() and not args.force:
+                    st = json.loads(path.read_text()).get("status", "?")
+                    results.append((cell, f"cached:{st}", 0.0))
+                    print(f"[cached:{st}] {cell}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", str(out)]
+                if multi:
+                    cmd.append("--multi-pod")
+                if args.save_hlo:
+                    cmd.append("--save-hlo")
+                t0 = time.time()
+                try:
+                    proc = subprocess.run(
+                        cmd, capture_output=True, text=True,
+                        timeout=args.timeout,
+                        env={**__import__("os").environ,
+                             "PYTHONPATH": "src"})
+                    dt = time.time() - t0
+                    if proc.returncode == 0:
+                        results.append((cell, "OK", dt))
+                        print(f"[ok {dt:6.1f}s] {cell}")
+                    else:
+                        tail = proc.stderr.strip().splitlines()[-12:]
+                        path.write_text(json.dumps({
+                            "arch": arch, "shape": shape,
+                            "mesh": mesh_name, "status": "FAIL",
+                            "stderr_tail": tail}))
+                        results.append((cell, "FAIL", dt))
+                        print(f"[FAIL {dt:6.1f}s] {cell}")
+                        for ln in tail:
+                            print("   |", ln)
+                except subprocess.TimeoutExpired:
+                    dt = time.time() - t0
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "TIMEOUT"}))
+                    results.append((cell, "TIMEOUT", dt))
+                    print(f"[TIMEOUT {dt:6.1f}s] {cell}")
+
+    ok = sum(1 for _, s, _ in results if s in ("OK", "cached:OK"))
+    skip = sum(1 for _, s, _ in results
+               if s in ("SKIP", "cached:SKIP"))
+    bad = [c for c, s, _ in results
+           if s not in ("OK", "SKIP", "cached:OK", "cached:SKIP")]
+    print(f"\nSWEEP: {ok} ok, {skip} skip, {len(bad)} bad of "
+          f"{len(results)}")
+    for c in bad:
+        print("  BAD:", c)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""One-time artifact patch: recompute MODEL_FLOPS-derived fields for
+prefill cells (the original dry-run counted 1 token per sequence instead
+of the full prompt).  HLO-derived fields (flops, bytes, collectives) are
+unchanged — no recompilation needed."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config                      # noqa: E402
+from repro.configs.shapes import SHAPES                   # noqa: E402
+from repro.roofline import hw                             # noqa: E402
+from repro.roofline.analysis import Roofline, model_flops  # noqa: E402
+
+
+def main() -> None:
+    d = Path("artifacts/dryrun")
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "OK":
+            continue
+        spec = SHAPES[r["shape"]]
+        cfg = get_config(r["arch"])
+        tokens = spec.batch * (spec.seq if spec.kind in ("train", "prefill")
+                               else 1)
+        mf_dev = model_flops(cfg, spec.kind, tokens) / r["chips"]
+        rl = r["roofline"]
+        if abs(rl["model_flops_per_dev"] - mf_dev) / max(mf_dev, 1) < 1e-6:
+            continue
+        link = hw.DCN_BW if r["mesh"] == "2x16x16" else hw.ICI_BW
+        roof = Roofline.from_measurements(
+            r["cost"]["flops"], r["cost"]["bytes_accessed"],
+            float(sum(r["collectives"].values())), link_bw=link)
+        rl.update(model_flops_per_dev=mf_dev,
+                  useful_flops_ratio=(mf_dev / roof.flops)
+                  if roof.flops else 0.0,
+                  mfu_bound=roof.mfu(mf_dev))
+        p.write_text(json.dumps(r, indent=2))
+        print("patched", p.name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""APEX-Q: the adaptive priority queue with elimination and combining
+(Calciu, Mendes & Herlihy 2014) as a production-grade multi-pod JAX
+framework. See DESIGN.md and EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,25 @@
+"""APEX-Q core: the paper's adaptive priority queue, batched for TPU.
+
+Public API:
+    PQConfig, PQState, init, tick       — the elimination+combining queue
+    FCPQ, ParallelPQ                    — the paper's baselines (§4)
+    RefPQ                               — sequential specification (oracle)
+    eliminate_batch                     — standalone elimination pass
+    make_distributed_tick               — shard_map distributed queue
+"""
+
+from repro.core.config import EMPTY_VAL, PQConfig, PRODUCTION, SMALL
+from repro.core.pqueue import (PQState, PQStats, TickResult, add_batch, init,
+                               peek_min, remove_batch, size, tick)
+from repro.core.baselines import FCPQ, ParallelPQ, merge_sorted
+from repro.core.elimination import ElimResult, eliminate_batch
+from repro.core.adaptive import update_detach
+from repro.core.ref_pq import RefPQ
+
+__all__ = [
+    "EMPTY_VAL", "PQConfig", "PRODUCTION", "SMALL",
+    "PQState", "PQStats", "TickResult", "add_batch", "init", "peek_min",
+    "remove_batch", "size", "tick",
+    "FCPQ", "ParallelPQ", "merge_sorted",
+    "ElimResult", "eliminate_batch", "update_detach", "RefPQ",
+]

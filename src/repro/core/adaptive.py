@@ -1,0 +1,24 @@
+"""The paper's adaptive moveHead policy (§2.1), as a pure function.
+
+"The number of elements that SL::moveHead() tries to detach to the
+sequential part adaptively varies between 8 and 65,536. Our policy is
+simple: if more than N insertions (e.g. N = 1000) occurred in the
+sequential part since the last SL::moveHead(), we halve the number of
+elements moved; otherwise, if less than M insertions (e.g. M = 100) were
+made, we double this number."
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import PQConfig
+
+
+def update_detach(cfg: PQConfig, detach_n, ins_since_move):
+    """New detach size after a moveHead event."""
+    halved = jnp.maximum(cfg.detach_min, detach_n // 2)
+    doubled = jnp.minimum(cfg.detach_max, detach_n * 2)
+    return jnp.where(
+        ins_since_move > cfg.halve_threshold, halved,
+        jnp.where(ins_since_move < cfg.double_threshold, doubled, detach_n))

@@ -1,0 +1,194 @@
+"""Baseline priority queues the paper compares against (§4), same tick API.
+
+* :class:`FCPQ` — flat-combining analogue (``fcskiplist`` / ``fcpairheap``):
+  every operation goes through the single combine stage; removals are a
+  cheap batched prefix pop, but *all* adds are merged sequentially into one
+  sorted structure — the paper's "sequential bottleneck" for adds.
+
+* :class:`ParallelPQ` — lock-free/lazy-skiplist analogue (``lfskiplist`` /
+  ``lazyskiplist``): adds scatter in parallel into the bucketed store, but
+  every removal batch pays a global min-extraction over the whole structure
+  — the paper's "significantly slowed down by removeMin synchronization".
+
+Both satisfy the same batch-sequential specification as the full ``pqe``
+queue (k-smallest of the union), so all three share the heapq oracle tests;
+they differ in *where the work lands*, which is what the Figs. 5–6
+benchmarks measure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import EMPTY_VAL, PQConfig
+from repro.core.pqueue import (INF, ParPart, TickResult, _redistribute,
+                               _sort_kv, _take_window, flatten_parallel,
+                               scatter_parallel)
+
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+def merge_sorted(ak, av, bk, bv):
+    """Rank-merge two sorted (key, val) streams (INF-padded).
+
+    out[i + rank_of_a_i_in_b] = a[i]; ties resolve a-first.  O(n+m) scatter
+    instead of an O((n+m) log) full sort — the same trick the Pallas
+    merge kernel uses (one-hot matmul there, native scatter here).
+    """
+    n, m = ak.shape[0], bk.shape[0]
+    pa = jnp.arange(n, dtype=_I32) + jnp.searchsorted(bk, ak,
+                                                      side="left").astype(_I32)
+    pb = jnp.arange(m, dtype=_I32) + jnp.searchsorted(ak, bk,
+                                                      side="right").astype(_I32)
+    ok = jnp.full((n + m,), INF, _F32)
+    ov = jnp.full((n + m,), EMPTY_VAL, _I32)
+    ok = ok.at[pa].set(ak).at[pb].set(bk)
+    ov = ov.at[pa].set(av).at[pb].set(bv)
+    return ok, ov
+
+
+# ---------------------------------------------------------------------------
+# Flat-combining baseline
+# ---------------------------------------------------------------------------
+
+class FCState(NamedTuple):
+    keys: jnp.ndarray     # [cap] sorted ascending, INF padded
+    vals: jnp.ndarray     # [cap]
+    length: jnp.ndarray   # scalar i32
+    add_seq: jnp.ndarray  # stats
+    rm_seq: jnp.ndarray
+    rm_empty: jnp.ndarray
+    n_ticks: jnp.ndarray
+
+
+class FCPQ:
+    """Flat combining: one sorted structure, all ops combined sequentially."""
+
+    @staticmethod
+    def init(cfg: PQConfig) -> FCState:
+        cap = cfg.total_cap
+        z = jnp.zeros((), _I32)
+        return FCState(jnp.full((cap,), INF, _F32),
+                       jnp.full((cap,), EMPTY_VAL, _I32), z, z, z, z, z)
+
+    @staticmethod
+    @functools.partial(jax.jit, static_argnums=0)
+    def tick(cfg: PQConfig, state: FCState, add_keys, add_vals, add_mask,
+             rm_count) -> Tuple[FCState, TickResult]:
+        cap = cfg.total_cap
+        R = cfg.r_max
+        rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), R)
+
+        ak = jnp.where(add_mask, add_keys.astype(_F32), INF)
+        av = jnp.where(add_mask, add_vals.astype(_I32), EMPTY_VAL)
+        ak, av = _sort_kv(ak, av)
+        n_adds = add_mask.sum(dtype=_I32)
+
+        # admission: drop largest beyond capacity (tests keep load bounded)
+        mk, mv = merge_sorted(state.keys, state.vals, ak, av)
+        total = state.length + n_adds
+        total = jnp.minimum(total, cap)
+
+        served = jnp.minimum(rm_count, total)
+        ridx = jnp.arange(R, dtype=_I32)
+        rm_keys = jnp.where(ridx < served, mk[jnp.clip(ridx, 0, cap - 1)], INF)
+        rm_vals = jnp.where(ridx < served, mv[jnp.clip(ridx, 0, cap - 1)],
+                            EMPTY_VAL)
+        rm_served = ridx < served
+
+        new_len = total - served
+        nk = _take_window(mk, served, cap, INF)
+        nv = _take_window(mv, served, cap, EMPTY_VAL)
+        in_new = jnp.arange(cap, dtype=_I32) < new_len
+        nk = jnp.where(in_new, nk, INF)
+        nv = jnp.where(in_new, nv, EMPTY_VAL)
+
+        new_state = FCState(
+            keys=nk, vals=nv, length=new_len.astype(_I32),
+            add_seq=state.add_seq + n_adds,
+            rm_seq=state.rm_seq + served,
+            rm_empty=state.rm_empty + (rm_count - served),
+            n_ticks=state.n_ticks + 1)
+        return new_state, TickResult(rm_keys, rm_vals, rm_served)
+
+    @staticmethod
+    def size(state: FCState):
+        return state.length
+
+
+# ---------------------------------------------------------------------------
+# Parallel-only baseline
+# ---------------------------------------------------------------------------
+
+class ParState(NamedTuple):
+    par: ParPart
+    add_par: jnp.ndarray
+    rm_par: jnp.ndarray
+    rm_empty: jnp.ndarray
+    n_ticks: jnp.ndarray
+
+
+class ParallelPQ:
+    """Parallel adds, but each removal batch pays a global extraction."""
+
+    @staticmethod
+    def init(cfg: PQConfig) -> ParState:
+        nb, bc = cfg.n_buckets, cfg.bucket_cap
+        splitters = jnp.full((nb,), INF, _F32).at[0].set(-INF)
+        z = jnp.zeros((), _I32)
+        par = ParPart(jnp.full((nb, bc), INF, _F32),
+                      jnp.full((nb, bc), EMPTY_VAL, _I32),
+                      jnp.zeros((nb,), _I32), splitters,
+                      jnp.asarray(INF, _F32), z)
+        return ParState(par, z, z, z, z)
+
+    @staticmethod
+    @functools.partial(jax.jit, static_argnums=0)
+    def tick(cfg: PQConfig, state: ParState, add_keys, add_vals, add_mask,
+             rm_count) -> Tuple[ParState, TickResult]:
+        R = cfg.r_max
+        rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), R)
+        ak = jnp.where(add_mask, add_keys.astype(_F32), INF)
+        av = jnp.where(add_mask, add_vals.astype(_I32), EMPTY_VAL)
+        n_adds = add_mask.sum(dtype=_I32)
+
+        par, _, _ = scatter_parallel(cfg, state.par, ak, av)
+
+        def removes(par):
+            fk, fv = flatten_parallel(cfg, par)
+            served = jnp.minimum(rm_count, par.par_count)
+            ridx = jnp.arange(R, dtype=_I32)
+            rm_keys = jnp.where(ridx < served,
+                                fk[jnp.clip(ridx, 0, cfg.par_cap - 1)], INF)
+            rm_vals = jnp.where(ridx < served,
+                                fv[jnp.clip(ridx, 0, cfg.par_cap - 1)],
+                                EMPTY_VAL)
+            rk = _take_window(fk, served, cfg.par_cap, INF)
+            rv = _take_window(fv, served, cfg.par_cap, EMPTY_VAL)
+            newpar, _ = _redistribute(cfg, rk, rv, par.par_count - served)
+            return newpar, rm_keys, rm_vals, served
+
+        def no_removes(par):
+            return (par, jnp.full((R,), INF, _F32),
+                    jnp.full((R,), EMPTY_VAL, _I32), jnp.zeros((), _I32))
+
+        par, rm_keys, rm_vals, served = jax.lax.cond(
+            rm_count > 0, removes, no_removes, par)
+        rm_served = jnp.arange(R, dtype=_I32) < served
+
+        new_state = ParState(
+            par=par,
+            add_par=state.add_par + n_adds,
+            rm_par=state.rm_par + served,
+            rm_empty=state.rm_empty + (rm_count - served),
+            n_ticks=state.n_ticks + 1)
+        return new_state, TickResult(rm_keys, rm_vals, rm_served)
+
+    @staticmethod
+    def size(state: ParState):
+        return state.par.par_count

@@ -1,0 +1,336 @@
+"""Distributed adaptive priority queue over a device mesh (DESIGN.md §3.4).
+
+The pod-scale realization of the paper's contention-reduction insight:
+
+1. **Local elimination** — each device matches its own shard of adds and
+   removes against the *replicated* global minimum (`min_value` is part of
+   the replicated state, so a local match is globally valid: any add with
+   key <= global min may eliminate).  Every matched pair is traffic that
+   never reaches the interconnect — the ICI analogue of "eliminated
+   operations never touch the shared structure".
+
+2. **Residual delegation** — surviving ops are all-gathered (the batch
+   analogue of posting to the elimination array for the server).
+
+3. **Replicated combine** — every device deterministically applies the same
+   residual batch to its replica of the structure.  The paper's single
+   server thread would be a straggler at pod scale; replicating the combine
+   trades (cheap) duplicate compute for zero additional communication, and
+   keeps the structure consistent without a coordinator.  This is a
+   deliberate beyond-paper change, recorded in EXPERIMENTS.md §Perf.
+
+4. Each device slices its own removals out of the global residual stream by
+   exclusive prefix over per-device residual remove counts.
+
+The V2 variant (:func:`make_distributed_tick_v2`) shards the PARALLEL part
+across devices — the paper's disjoint-access parallelism at pod scale:
+structure capacity grows linearly with devices, scatter work divides by
+ndev, and moveHead gathers only per-device candidate prefixes.  Service is
+lazy-refill (a tick that drains the head serves the shortfall next tick),
+matching the paper's per-op moveHead shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pqueue
+from repro.core.config import EMPTY_VAL, PQConfig
+from repro.core.elimination import eliminate_batch
+from repro.core.pqueue import INF, PQState, TickResult
+
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+def local_tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
+               rm_count, axis: str,
+               eliminate: bool = True) -> Tuple[PQState, TickResult]:
+    """Per-device body of the distributed tick (runs under shard_map).
+
+    `state` is replicated; op arrays are the device-local shard with
+    ``a_max``/``r_max`` sized per device.  ``eliminate=False`` disables the
+    local elimination pass (the flat-combining-only ablation: every op is
+    delegated over the interconnect — used by the benchmarks to quantify
+    elimination's collective-byte savings).
+    """
+    ndev = jax.lax.axis_size(axis)
+    my = jax.lax.axis_index(axis)
+    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), cfg.r_max)
+
+    # ---- 1. local elimination against the replicated global minimum ----
+    min_for_elim = state.min_value if eliminate else jnp.asarray(-INF)
+    er = eliminate_batch(add_keys, add_vals, add_mask, rm_count,
+                         min_for_elim)
+
+    # ---- 2. delegate residuals: all-gather surviving adds + rm counts ----
+    res_keys = jax.lax.all_gather(er.residual_keys, axis)   # [ndev, a_max]
+    res_vals = jax.lax.all_gather(er.residual_vals, axis)
+    res_rm = jax.lax.all_gather(er.residual_rm, axis)       # [ndev]
+
+    g_keys = res_keys.reshape(-1)
+    g_vals = res_vals.reshape(-1)
+    g_mask = g_keys < INF
+    g_rm = res_rm.sum(dtype=_I32)
+
+    # ---- 3. replicated combine: identical tick on every device ----
+    # The inner tick's batch geometry is ndev * a_max / ndev * r_max.
+    gcfg = _global_cfg(cfg, int(ndev) if isinstance(ndev, int) else None)
+    new_state, gres = pqueue.tick(gcfg, state, g_keys, g_vals, g_mask, g_rm)
+
+    # account locally-eliminated pairs in the replicated stats (identical on
+    # every device after the psum, so the state stays replicated);
+    # local_elim tracks wire avoidance separately from in-structure elims
+    n_local_elim = jax.lax.psum(er.n_matched, axis)
+    new_state = new_state._replace(stats=new_state.stats._replace(
+        add_imm_elim=new_state.stats.add_imm_elim + n_local_elim,
+        n_removes=new_state.stats.n_removes + n_local_elim,
+        local_elim=new_state.stats.local_elim + n_local_elim))
+
+    # ---- 4. slice my removals: my locally-eliminated + my residual share --
+    offset = jnp.where(jnp.arange(res_rm.shape[0], dtype=_I32) < my,
+                       res_rm, 0).sum(dtype=_I32)
+    ridx = jnp.arange(cfg.r_max, dtype=_I32)
+    n_loc = er.n_matched
+    # first n_loc slots: locally eliminated values; rest: residual stream
+    gidx = jnp.clip(offset + ridx - n_loc, 0, gres.rm_keys.shape[0] - 1)
+    rm_keys = jnp.where(ridx < n_loc,
+                        er.matched_keys[jnp.clip(ridx, 0, cfg.a_max - 1)],
+                        gres.rm_keys[gidx])
+    rm_vals = jnp.where(ridx < n_loc,
+                        er.matched_vals[jnp.clip(ridx, 0, cfg.a_max - 1)],
+                        gres.rm_vals[gidx])
+    requested = ridx < rm_count
+    rm_keys = jnp.where(requested, rm_keys, INF)
+    rm_vals = jnp.where(requested, rm_vals, EMPTY_VAL)
+    rm_served = requested & (rm_keys < INF)
+    return new_state, TickResult(rm_keys, rm_vals, rm_served)
+
+
+@functools.lru_cache(maxsize=None)
+def _global_cfg_cached(cfg: PQConfig, ndev: int) -> PQConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, a_max=cfg.a_max * ndev,
+                               r_max=cfg.r_max * ndev,
+                               seq_cap=max(cfg.seq_cap,
+                                           (cfg.a_max + cfg.r_max) * ndev
+                                           + cfg.seq_cap))
+
+
+def _global_cfg(cfg: PQConfig, ndev) -> PQConfig:
+    if ndev is None:
+        raise ValueError("device count must be static under shard_map")
+    return _global_cfg_cached(cfg, ndev)
+
+
+def make_distributed_tick(cfg: PQConfig, mesh, axis: str = "data",
+                          eliminate: bool = True):
+    """Builds a jitted distributed tick over `mesh[axis]`.
+
+    The state uses the *global* config (batch geometry scaled by device
+    count); ops are sharded over `axis`; state is replicated.
+    """
+    ndev = mesh.shape[axis]
+    gcfg = _global_cfg(cfg, ndev)
+
+    def body(state, add_keys, add_vals, add_mask, rm_count):
+        return local_tick(cfg, state, add_keys, add_vals, add_mask,
+                          rm_count[0], axis, eliminate=eliminate)
+
+    from jax import shard_map
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P(axis)),
+        check_vma=False)
+    return gcfg, jax.jit(mapped)
+
+
+def init_distributed(cfg: PQConfig, mesh, axis: str = "data") -> PQState:
+    ndev = mesh.shape[axis]
+    return pqueue.init(_global_cfg(cfg, ndev))
+
+
+# ---------------------------------------------------------------------------
+# V2: device-sharded parallel part (the paper's disjoint-access parallelism
+# at pod scale — structure capacity grows linearly with devices)
+# ---------------------------------------------------------------------------
+
+class DistState(NamedTuple):
+    """V2 state: replicated head + per-device parallel part.
+
+    `rep` is the replicated PQState whose OWN parallel part stays empty;
+    `par` is this device's shard of the parallel part (hash-of-value
+    ownership — load-balanced, and moveHead correctness does not depend on
+    ranges because candidates are gathered from every owner).
+    """
+    rep: PQState
+    par: pqueue.ParPart
+
+
+def init_distributed_v2(cfg: PQConfig, mesh, axis: str = "data"):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ndev = mesh.shape[axis]
+    gcfg = _global_cfg(cfg, ndev)
+    rep = pqueue.init(gcfg)
+
+    def one_par(_):
+        st = pqueue.init(cfg)
+        return pqueue._par_of(st)
+
+    pars = jax.vmap(one_par)(jnp.arange(ndev))
+    par = jax.device_put(pars, NamedSharding(mesh, P(axis)))
+    return DistState(rep=rep, par=par)
+
+
+def local_tick_v2(cfg: PQConfig, state: DistState, add_keys, add_vals,
+                  add_mask, rm_count, axis: str):
+    """V2 body (under shard_map): like V1 but large-key adds scatter into
+    the DEVICE-LOCAL parallel shard (owner = hash(val) — the residual
+    gather already made all adds visible everywhere, so ownership is a
+    mask, not a route), and moveHead gathers per-device candidate prefixes
+    instead of whole structures."""
+    ndev = jax.lax.axis_size(axis)
+    my = jax.lax.axis_index(axis)
+    rep = state.rep
+    par = jax.tree.map(lambda x: x[0], state.par)  # drop shard_map lead dim
+    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), cfg.r_max)
+
+    # 1. local elimination (identical to V1)
+    er = eliminate_batch(add_keys, add_vals, add_mask, rm_count,
+                         rep.min_value)
+
+    # 2. residual delegation
+    res_keys = jax.lax.all_gather(er.residual_keys, axis)
+    res_vals = jax.lax.all_gather(er.residual_vals, axis)
+    res_rm = jax.lax.all_gather(er.residual_rm, axis)
+    g_keys = res_keys.reshape(-1)
+    g_vals = res_vals.reshape(-1)
+    g_rm = res_rm.sum(dtype=_I32)
+
+    # 3. split: small keys -> the replicated combine; large keys -> MY
+    #    shard of the parallel part (ownership mask by hash of value)
+    small = (g_keys <= rep.last_seq) & (g_keys < INF)
+    mine = ((g_vals % ndev) == my) & ~small & (g_keys < INF)
+    par, _, _ = pqueue.scatter_parallel(
+        cfg, par, jnp.where(mine, g_keys, INF),
+        jnp.where(mine, g_vals, EMPTY_VAL))
+
+    # 4. replicated combine over the sequential part only (small adds +
+    #    removes); shortfall triggers the distributed moveHead below
+    gcfg = _global_cfg(cfg, int(ndev) if isinstance(ndev, int) else None)
+    small_keys = jnp.where(small, g_keys, INF)
+    small_vals = jnp.where(small, g_vals, EMPTY_VAL)
+    # the replicated PQState's own parallel part is EMPTY by construction:
+    # every large add went to a device shard, so tick()'s internal
+    # emergency path would find nothing — handle shortfall ourselves
+    new_rep, gres = pqueue.tick(gcfg, rep, small_keys, small_vals,
+                                small, g_rm)
+
+    # 5. distributed moveHead: if the head drained (or ran short), gather
+    #    per-device candidate prefixes and rebuild the replicated head
+    shortfall = (new_rep.stats.rm_empty - rep.stats.rm_empty) > 0
+    need = (new_rep.seq_len <= 0) & ((g_rm > 0) | shortfall)
+
+    def do_move(par, new_rep):
+        k = jnp.maximum(new_rep.detach_n, g_rm)
+        fk, fv = pqueue.flatten_parallel(cfg, par)
+        cand_k = fk[: cfg.detach_max]
+        cand_v = fv[: cfg.detach_max]
+        all_k = jax.lax.all_gather(cand_k, axis).reshape(-1)
+        all_v = jax.lax.all_gather(cand_v, axis).reshape(-1)
+        order = jnp.argsort(all_k)
+        all_k, all_v = all_k[order], all_v[order]
+        take = jnp.minimum(k, jnp.sum(all_k < INF, dtype=_I32))
+        take = jnp.minimum(take, new_rep.seq_keys.shape[0])
+        sel = jnp.arange(all_k.shape[0], dtype=_I32) < take
+        # rebuild the replicated head from the global prefix (padded)
+        sc = new_rep.seq_keys.shape[0]
+        sk = pqueue._take_window(jnp.where(sel, all_k, INF), 0, sc, INF)
+        sv = pqueue._take_window(jnp.where(sel, all_v, EMPTY_VAL), 0, sc,
+                                 EMPTY_VAL)
+        moved = DistStateMove(sk, sv, take)
+        # drop MY contributed candidates that made the global prefix
+        taken_mine = sel & ((all_v % ndev) == my) & (all_k < INF)
+        n_mine = jnp.sum(taken_mine, dtype=_I32)
+        rk = pqueue._shift_left(fk, n_mine, INF)
+        rv = pqueue._shift_left(fv, n_mine, EMPTY_VAL)
+        newpar, _ = pqueue._redistribute(cfg, rk, rv,
+                                         par.par_count - n_mine)
+        return newpar, moved
+
+    def no_move(par, new_rep):
+        sc = new_rep.seq_keys.shape[0]
+        return par, DistStateMove(jnp.full((sc,), INF, _F32),
+                                  jnp.full((sc,), EMPTY_VAL, _I32),
+                                  jnp.zeros((), _I32))
+
+    par, moved = jax.lax.cond(need, do_move, no_move, par, new_rep)
+    new_rep = jax.lax.cond(
+        need,
+        lambda r: r._replace(
+            seq_keys=moved.keys, seq_vals=moved.vals, seq_len=moved.n,
+            last_seq=jnp.where(
+                moved.n > 0,
+                moved.keys[jnp.clip(moved.n - 1, 0,
+                                    moved.keys.shape[0] - 1)], -INF),
+            min_value=jnp.where(moved.n > 0, moved.keys[0], INF)),
+        lambda r: r, new_rep)
+    # global min across shards (parallel part lives on devices now)
+    par_min_global = jax.lax.pmin(par.par_min, axis)
+    new_rep = new_rep._replace(
+        min_value=jnp.minimum(new_rep.min_value, par_min_global))
+
+    # 6. my removals: local eliminations first, then my residual slice
+    offset = jnp.where(jnp.arange(res_rm.shape[0], dtype=_I32) < my,
+                       res_rm, 0).sum(dtype=_I32)
+    ridx = jnp.arange(cfg.r_max, dtype=_I32)
+    n_loc = er.n_matched
+    gidx = jnp.clip(offset + ridx - n_loc, 0, gres.rm_keys.shape[0] - 1)
+    rm_keys = jnp.where(ridx < n_loc,
+                        er.matched_keys[jnp.clip(ridx, 0, cfg.a_max - 1)],
+                        gres.rm_keys[gidx])
+    rm_vals = jnp.where(ridx < n_loc,
+                        er.matched_vals[jnp.clip(ridx, 0, cfg.a_max - 1)],
+                        gres.rm_vals[gidx])
+    requested = ridx < rm_count
+    rm_keys = jnp.where(requested, rm_keys, INF)
+    rm_vals = jnp.where(requested, rm_vals, EMPTY_VAL)
+    par_out = jax.tree.map(lambda x: x[None], par)  # restore lead dim
+    return (DistState(rep=new_rep, par=par_out),
+            TickResult(rm_keys, rm_vals, requested & (rm_keys < INF)))
+
+
+class DistStateMove(NamedTuple):
+    keys: jnp.ndarray
+    vals: jnp.ndarray
+    n: jnp.ndarray
+
+
+def make_distributed_tick_v2(cfg: PQConfig, mesh, axis: str = "data"):
+    """V2: sharded parallel part. Capacity = ndev × par_cap; scatter work
+    per device divides by ndev; moveHead gathers only candidate prefixes
+    (detach_max keys/device) instead of whole structures."""
+    from jax.sharding import PartitionSpec as P
+    ndev = mesh.shape[axis]
+    gcfg = _global_cfg(cfg, ndev)
+
+    def body(state, add_keys, add_vals, add_mask, rm_count):
+        return local_tick_v2(cfg, state, add_keys, add_vals, add_mask,
+                             rm_count[0], axis)
+
+    from jax import shard_map
+    par_spec = pqueue.ParPart(*(P(axis),) * 6)
+    state_spec = DistState(rep=jax.tree.map(lambda _: P(), pqueue.init(
+        gcfg)), par=par_spec)
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_spec, P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(state_spec, P(axis)),
+        check_vma=False)
+    return gcfg, jax.jit(mapped)

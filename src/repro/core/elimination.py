@@ -1,0 +1,64 @@
+"""Batch elimination matching (paper §2.2), standalone.
+
+Used by the single-queue tick (inlined there for fusion) and by the
+distributed queue's *local elimination pass*, where each device matches its
+own adds and removes against the replicated global minimum before anything
+touches the interconnect — the pod-scale analogue of the paper's
+contention-reduction claim (eliminated pairs never touch the shared
+structure; here, they never touch the network).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.config import EMPTY_VAL
+
+INF = jnp.inf
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+class ElimResult(NamedTuple):
+    n_matched: jnp.ndarray        # pairs eliminated
+    matched_keys: jnp.ndarray     # [a_max] keys handed to removes (INF pad)
+    matched_vals: jnp.ndarray     # [a_max]
+    residual_keys: jnp.ndarray    # [a_max] surviving adds, sorted, INF pad
+    residual_vals: jnp.ndarray    # [a_max]
+    residual_rm: jnp.ndarray      # scalar: surviving removeMin count
+
+
+def eliminate_batch(add_keys, add_vals, add_mask, rm_count,
+                    min_value) -> ElimResult:
+    """Immediate elimination: match add(v <= min_value) with removes, 1:1.
+
+    add_keys need not be pre-sorted; the result's residual adds are sorted.
+    Matching pairs the *smallest* eligible adds first so that the exchanged
+    values are the best possible service (any eligible add is a valid match
+    per the paper; smallest-first also keeps the batch deterministic).
+    """
+    a = add_keys.shape[0]
+    k = jnp.where(add_mask, add_keys.astype(_F32), INF)
+    v = jnp.where(add_mask, add_vals.astype(_I32), EMPTY_VAL)
+    order = jnp.argsort(k)
+    k, v = k[order], v[order]
+    n_adds = add_mask.sum(dtype=_I32)
+    valid = jnp.arange(a, dtype=_I32) < n_adds
+
+    n_elig = jnp.sum((k <= min_value) & valid, dtype=_I32)
+    n_matched = jnp.minimum(n_elig, jnp.asarray(rm_count, _I32))
+
+    idx = jnp.arange(a, dtype=_I32)
+    matched = idx < n_matched
+    matched_keys = jnp.where(matched, k, INF)
+    matched_vals = jnp.where(matched, v, EMPTY_VAL)
+
+    sidx = idx + n_matched
+    residual_keys = jnp.where(sidx < a, k[jnp.clip(sidx, 0, a - 1)], INF)
+    residual_vals = jnp.where(sidx < a, v[jnp.clip(sidx, 0, a - 1)],
+                              EMPTY_VAL)
+    residual_rm = jnp.asarray(rm_count, _I32) - n_matched
+    return ElimResult(n_matched, matched_keys, matched_vals,
+                      residual_keys, residual_vals, residual_rm)

@@ -1,0 +1,527 @@
+"""Batched adaptive priority queue with elimination and combining (APEX-Q core).
+
+This is the TPU-native re-realization of Calciu, Mendes & Herlihy 2014
+("The Adaptive Priority Queue with Elimination and Combining").  See
+DESIGN.md §2–3 for the full mapping; in brief:
+
+* the asynchronous *elimination array* becomes a vectorized batch
+  elimination pass over a tick's operation batch;
+* the *server thread* (flat combining) becomes the fused combine stage of
+  :func:`tick` — one agent applies all surviving ops at amortized cost;
+* the *sequential skiplist part* becomes a sorted array head
+  (``seq_keys``/``seq_vals``), consumed by pointer bumps;
+* the *parallel skiplist part* becomes a key-range bucketed store where
+  large-key adds scatter-append without conflicts (disjoint-access
+  parallelism);
+* ``moveHead``/``chopHead`` and the paper's adaptive detach policy
+  (halve over N=1000, double under M=100, bounds [8, 65536]) transfer
+  verbatim.
+
+Correctness contract (checked against a heapq oracle in
+``tests/test_pq_properties.py``): a tick with adds ``X`` and ``r`` removes
+returns exactly the ``r`` smallest keys of ``PQ ∪ X`` (as a multiset), and
+the post-state contains the rest.  This is the batch-sequential equivalent
+of the paper's linearizability argument (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import EMPTY_VAL, PQConfig
+
+INF = jnp.inf
+_I32 = jnp.int32
+_F32 = jnp.float32
+
+
+class PQStats(NamedTuple):
+    """Cumulative per-path counters (reproduces the paper's Figs. 7–8 and
+    Table 1 accounting)."""
+
+    add_imm_elim: jnp.ndarray   # adds eliminated immediately (v <= minValue)
+    add_upc_elim: jnp.ndarray   # adds eliminated after "aging" in the batch
+    add_seq: jnp.ndarray        # adds combined into the sequential part
+    add_par: jnp.ndarray        # adds inserted in parallel (SL::addPar)
+    rm_seq: jnp.ndarray         # removes served from the sequential part
+    rm_par: jnp.ndarray         # removes served via emergency moveHead
+    rm_empty: jnp.ndarray       # removes that found an empty queue
+    n_movehead: jnp.ndarray     # SL::moveHead() events
+    n_chophead: jnp.ndarray     # SL::chopHead() events
+    n_rebalance: jnp.ndarray    # parallel-part rebalances (bucket overflow)
+    n_spill: jnp.ndarray        # sequential->parallel spills (partial chop)
+    n_dropped: jnp.ndarray      # items dropped at total-capacity (should be 0)
+    n_ticks: jnp.ndarray
+    n_removes: jnp.ndarray      # total removeMin requests (for Table 1 ratios)
+    local_elim: jnp.ndarray     # distributed only: pairs matched BEFORE the
+                                # interconnect (wire-avoidance metric)
+
+    @staticmethod
+    def zeros() -> "PQStats":
+        z = jnp.zeros((), _I32)
+        return PQStats(*([z] * 15))
+
+
+class PQState(NamedTuple):
+    """Functional state of the dual-structure priority queue (a pytree)."""
+
+    # sequential part: sorted ascending, INF-padded beyond seq_len
+    seq_keys: jnp.ndarray       # [seq_cap] f32
+    seq_vals: jnp.ndarray       # [seq_cap] i32
+    seq_len: jnp.ndarray        # scalar i32
+
+    # parallel part: key-range buckets (2-level radix "skiplist")
+    buckets: jnp.ndarray        # [NB, BCAP] f32 (INF = empty slot)
+    bvals: jnp.ndarray          # [NB, BCAP] i32
+    bcounts: jnp.ndarray        # [NB] i32
+    splitters: jnp.ndarray      # [NB] f32, splitters[0] = -INF, nondecreasing
+    par_min: jnp.ndarray        # scalar f32 (INF if parallel part empty)
+    par_count: jnp.ndarray      # scalar i32
+
+    # paper state
+    min_value: jnp.ndarray      # scalar f32 (paper's minValue; INF if empty)
+    last_seq: jnp.ndarray       # scalar f32 (paper's lastSeq.key; -INF if none)
+    detach_n: jnp.ndarray       # scalar i32 (adaptive moveHead size)
+    ins_since_move: jnp.ndarray  # scalar i32 (insertions since last moveHead)
+    quiet_ticks: jnp.ndarray    # scalar i32 (ticks without removes)
+
+    stats: PQStats
+
+
+class TickResult(NamedTuple):
+    rm_keys: jnp.ndarray        # [r_max] f32; INF where unserved/masked
+    rm_vals: jnp.ndarray        # [r_max] i32; EMPTY_VAL where unserved
+    rm_served: jnp.ndarray      # [r_max] bool
+
+
+def init(cfg: PQConfig) -> PQState:
+    nb, bc, sc = cfg.n_buckets, cfg.bucket_cap, cfg.seq_cap
+    splitters = jnp.full((nb,), INF, _F32).at[0].set(-INF)
+    return PQState(
+        seq_keys=jnp.full((sc,), INF, _F32),
+        seq_vals=jnp.full((sc,), EMPTY_VAL, _I32),
+        seq_len=jnp.zeros((), _I32),
+        buckets=jnp.full((nb, bc), INF, _F32),
+        bvals=jnp.full((nb, bc), EMPTY_VAL, _I32),
+        bcounts=jnp.zeros((nb,), _I32),
+        splitters=splitters,
+        par_min=jnp.asarray(INF, _F32),
+        par_count=jnp.zeros((), _I32),
+        min_value=jnp.asarray(INF, _F32),
+        last_seq=jnp.asarray(-INF, _F32),
+        detach_n=jnp.asarray(cfg.detach_init, _I32),
+        ins_since_move=jnp.zeros((), _I32),
+        quiet_ticks=jnp.zeros((), _I32),
+        stats=PQStats.zeros(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# small vectorized helpers
+# ---------------------------------------------------------------------------
+
+def _sort_kv(keys, vals):
+    order = jnp.argsort(keys)
+    return keys[order], vals[order]
+
+
+def _sort_kvf(keys, vals, flags):
+    order = jnp.argsort(keys)
+    return keys[order], vals[order], flags[order]
+
+
+def _shift_left(arr, n, fill):
+    """arr shifted left by (traced) n, filled with `fill` on the right."""
+    size = arr.shape[0]
+    idx = jnp.arange(size) + n
+    out = arr[jnp.clip(idx, 0, size - 1)]
+    return jnp.where(idx < size, out, fill)
+
+
+def _take_window(arr, start, out_len, fill):
+    """arr[start : start+out_len] with static out_len, `fill` past the end."""
+    size = arr.shape[0]
+    idx = jnp.arange(out_len) + start
+    out = arr[jnp.clip(idx, 0, size - 1)]
+    return jnp.where(idx < size, out, fill)
+
+
+# ---------------------------------------------------------------------------
+# parallel part primitives (the bucketed "skiplist" suffix)
+# ---------------------------------------------------------------------------
+
+class ParPart(NamedTuple):
+    buckets: jnp.ndarray
+    bvals: jnp.ndarray
+    bcounts: jnp.ndarray
+    splitters: jnp.ndarray
+    par_min: jnp.ndarray
+    par_count: jnp.ndarray
+
+
+def _par_of(state: PQState) -> ParPart:
+    return ParPart(state.buckets, state.bvals, state.bcounts,
+                   state.splitters, state.par_min, state.par_count)
+
+
+def flatten_parallel(cfg: PQConfig, par: ParPart):
+    """All parallel items as a sorted flat (keys, vals) pair of size par_cap."""
+    slot = jnp.arange(cfg.bucket_cap)[None, :]
+    valid = slot < par.bcounts[:, None]
+    fk = jnp.where(valid, par.buckets, INF).reshape(-1)
+    fv = jnp.where(valid, par.bvals, EMPTY_VAL).reshape(-1)
+    return _sort_kv(fk, fv)
+
+
+def _redistribute(cfg: PQConfig, flat_k, flat_v, total):
+    """Evenly refill the buckets from a sorted flat stream.
+
+    The skiplist analogue of rebalancing: bucket i receives the sorted rank
+    range [i*per, (i+1)*per), and splitters are the per-bucket minima, so
+    bucket key ranges stay disjoint and ordered.
+    """
+    nb, bc = cfg.n_buckets, cfg.bucket_cap
+    size = flat_k.shape[0]
+    per = jnp.clip((total + nb - 1) // jnp.asarray(nb, _I32), 1, bc)
+    capacity = nb * per
+    kept = jnp.minimum(total, capacity)
+    dropped = total - kept
+
+    r = jnp.arange(size, dtype=_I32)
+    b = jnp.clip(r // per, 0, nb - 1)
+    s = r % per
+    ok = r < kept
+    s = jnp.where(ok, s, bc)  # out-of-range slot => dropped by mode="drop"
+
+    buckets = jnp.full((nb, bc), INF, _F32).at[b, s].set(flat_k, mode="drop")
+    bvals = jnp.full((nb, bc), EMPTY_VAL, _I32).at[b, s].set(flat_v, mode="drop")
+    bcounts = jnp.clip(kept - jnp.arange(nb, dtype=_I32) * per, 0, per)
+
+    sp_idx = jnp.arange(nb, dtype=_I32) * per
+    sp = flat_k[jnp.clip(sp_idx, 0, size - 1)]
+    sp = jnp.where(sp_idx < kept, sp, INF)
+    splitters = sp.at[0].set(-INF)
+
+    par_min = jnp.where(kept > 0, flat_k[0], jnp.asarray(INF, _F32))
+    return ParPart(buckets, bvals, bcounts, splitters, par_min,
+                   kept.astype(_I32)), dropped.astype(_I32)
+
+
+def scatter_parallel(cfg: PQConfig, par: ParPart, keys, vals):
+    """SL::addPar(): disjoint-access parallel insert of a key batch.
+
+    Fast path: route each key through the splitter directory
+    (the skiplist's top level) and segment-append within its bucket.
+    On (rare) bucket overflow, fall back to a full rebalance — the batch
+    analogue of skiplist restructuring.
+
+    Invalid entries are INF keys; they are dropped.
+    Returns (new_par, n_rebalance, n_dropped).
+    """
+    nb, bc = cfg.n_buckets, cfg.bucket_cap
+    size = keys.shape[0]
+    valid = keys < INF
+
+    bidx = jnp.clip(
+        jnp.searchsorted(par.splitters, keys, side="right") - 1, 0, nb - 1
+    ).astype(_I32)
+    bidx = jnp.where(valid, bidx, nb - 1)
+
+    # stable sort by bucket id to compute within-bucket append ranks
+    order = jnp.argsort(jnp.where(valid, bidx, nb), stable=True)
+    sb = bidx[order]
+    sk = keys[order]
+    sv = vals[order]
+    svalid = valid[order]
+    first = jnp.searchsorted(sb, sb, side="left")
+    rank = jnp.arange(size, dtype=_I32) - first.astype(_I32)
+    slot = par.bcounts[sb] + rank
+
+    overflow = jnp.any(svalid & (slot >= bc))
+
+    def fast(par):
+        tslot = jnp.where(svalid, slot, bc)  # OOB => dropped
+        buckets = par.buckets.at[sb, tslot].set(sk, mode="drop")
+        bvals = par.bvals.at[sb, tslot].set(sv, mode="drop")
+        bcounts = par.bcounts + jnp.zeros((nb,), _I32).at[sb].add(
+            svalid.astype(_I32))
+        kmin = jnp.min(jnp.where(svalid, sk, INF))
+        par_min = jnp.minimum(par.par_min, kmin)
+        par_count = par.par_count + svalid.sum(dtype=_I32)
+        return (ParPart(buckets, bvals, bcounts, par.splitters, par_min,
+                        par_count),
+                jnp.zeros((), _I32), jnp.zeros((), _I32))
+
+    def slow(par):
+        fk, fv = flatten_parallel(cfg, par)
+        allk = jnp.concatenate([fk, jnp.where(valid, keys, INF)])
+        allv = jnp.concatenate([fv, jnp.where(valid, vals, EMPTY_VAL)])
+        allk, allv = _sort_kv(allk, allv)
+        total = par.par_count + valid.sum(dtype=_I32)
+        newpar, dropped = _redistribute(cfg, allk, allv, total)
+        return newpar, jnp.ones((), _I32), dropped
+
+    return jax.lax.cond(overflow, slow, fast, par)
+
+
+# ---------------------------------------------------------------------------
+# the tick: elimination -> combining -> parallel adds -> moveHead/chopHead
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=0)
+def tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
+         rm_count) -> Tuple[PQState, TickResult]:
+    """One combined round over an operation batch.
+
+    Args:
+      cfg: static PQConfig.
+      state: current PQState.
+      add_keys: [a_max] f32 — keys of PQ::add() requests (finite).
+      add_vals: [a_max] i32 — payloads.
+      add_mask: [a_max] bool — which slots hold real adds.
+      rm_count: scalar i32 — number of PQ::removeMin() requests (<= r_max).
+
+    Returns (new_state, TickResult).
+    """
+    A, R, SC = cfg.a_max, cfg.r_max, cfg.seq_cap
+    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), R)
+
+    # -- 0. sanitize + sort the add batch (the elimination array contents) --
+    ak = jnp.where(add_mask, add_keys.astype(_F32), INF)
+    av = jnp.where(add_mask, add_vals.astype(_I32), EMPTY_VAL)
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as kops
+        ak, av, _ = kops.sort_kvf(ak, av, jnp.zeros((A,), _I32),
+                                  backend="pallas")
+    else:
+        ak, av = _sort_kv(ak, av)
+    n_adds = add_mask.sum(dtype=_I32)
+    a_valid = jnp.arange(A, dtype=_I32) < n_adds
+
+    # -- 1. immediate elimination: add(v <= minValue) pairs with a remove --
+    m0 = state.min_value
+    n_elig = jnp.sum((ak <= m0) & a_valid, dtype=_I32)
+    n_imm = jnp.minimum(n_elig, rm_count)
+    r1 = rm_count - n_imm
+    # removed stream segment 1 = ak[:n_imm]
+
+    rem_k = _shift_left(ak, n_imm, INF)
+    rem_v = _shift_left(av, n_imm, EMPTY_VAL)
+
+    # -- 2. split small (<= lastSeq: SL::addPar would return false) / large --
+    small_mask = rem_k <= state.last_seq        # INF never <= finite last_seq
+    n_small = small_mask.sum(dtype=_I32)
+    small_k = jnp.where(small_mask, rem_k, INF)
+    small_v = jnp.where(small_mask, rem_v, EMPTY_VAL)
+    large_k = _shift_left(rem_k, n_small, INF)
+    large_v = _shift_left(rem_v, n_small, EMPTY_VAL)
+
+    # -- 3. merge sequential part with small adds; removes consume prefix --
+    # An add consumed inside the prefix eliminated *after* the minimum rose
+    # past it: the batch form of the paper's "upcoming elimination" (aging
+    # in the elimination array).  Adds beyond the prefix are the server's
+    # SL::addSeq() batch (combining).
+    M = SC + A
+    if cfg.backend == "pallas":
+        # both streams are already sorted: rank-merge on the MXU
+        from repro.kernels import ops as kops
+        mk, mv, mf = kops.merge_sorted(
+            state.seq_keys, state.seq_vals, jnp.zeros((SC,), _I32),
+            small_k, small_v, small_mask.astype(_I32), backend="pallas")
+        mf = mf.astype(bool)
+    else:
+        mk = jnp.concatenate([state.seq_keys, small_k])
+        mv = jnp.concatenate([state.seq_vals, small_v])
+        mf = jnp.concatenate([jnp.zeros((SC,), bool), small_mask])  # is-add
+        mk, mv, mf = _sort_kvf(mk, mv, mf)
+
+    avail = state.seq_len + n_small
+    s = jnp.minimum(r1, avail)
+    consumed = jnp.arange(M, dtype=_I32) < s
+    n_upc = jnp.sum(consumed & mf, dtype=_I32)   # upcoming eliminations
+    n_rm_seq = s - n_upc                         # removes served from storage
+    # removed stream segment 2 = mk[:s]
+
+    new_len = avail - s
+    nsk = _take_window(mk, s, SC, INF)
+    nsv = _take_window(mv, s, SC, EMPTY_VAL)
+    in_new = jnp.arange(SC, dtype=_I32) < new_len
+    nsk = jnp.where(in_new, nsk, INF)
+    nsv = jnp.where(in_new, nsv, EMPTY_VAL)
+    n_addseq = n_small - n_upc
+
+    # -- 4. spill (partial chopHead) if the sequential part grew too large --
+    spill_cnt = jnp.maximum(0, new_len - cfg.spill_threshold)
+    sp_start = new_len - spill_cnt
+    sp_k = _take_window(nsk, sp_start, A, INF)
+    sp_v = _take_window(nsv, sp_start, A, EMPTY_VAL)
+    sp_k = jnp.where(jnp.arange(A, dtype=_I32) < spill_cnt, sp_k, INF)
+    sp_v = jnp.where(jnp.arange(A, dtype=_I32) < spill_cnt, sp_v, EMPTY_VAL)
+    keep = jnp.arange(SC, dtype=_I32) < sp_start
+    nsk = jnp.where(keep, nsk, INF)
+    nsv = jnp.where(keep, nsv, EMPTY_VAL)
+    new_len = new_len - spill_cnt
+
+    # -- 5. SL::addPar(): scatter large adds (+ spill) into the buckets --
+    n_par_adds = jnp.sum(large_k < INF, dtype=_I32)
+    pk = jnp.concatenate([large_k, sp_k])
+    pv = jnp.concatenate([large_v, sp_v])
+    par, n_rebal, n_drop = scatter_parallel(cfg, _par_of(state), pk, pv)
+
+    # -- 6. shortfall => SL::moveHead(): detach a fresh sequential part --
+    r2 = r1 - s                      # removes that drained the merged stream
+    need_move = r2 > 0
+
+    def do_move(par, nsk, nsv, new_len):
+        fk, fv = flatten_parallel(cfg, par)
+        served = jnp.minimum(r2, par.par_count)
+        k_extract = jnp.minimum(
+            jnp.maximum(state.detach_n, r2), par.par_count)
+        out3_k = jnp.where(jnp.arange(cfg.par_cap, dtype=_I32) < served,
+                           fk, INF)
+        out3_v = jnp.where(jnp.arange(cfg.par_cap, dtype=_I32) < served,
+                           fv, EMPTY_VAL)
+        # new sequential part = extracted window beyond the served prefix
+        nlen = k_extract - served
+        nsk2 = _take_window(fk, served, SC, INF)
+        nsv2 = _take_window(fv, served, SC, EMPTY_VAL)
+        ok = jnp.arange(SC, dtype=_I32) < nlen
+        nsk2 = jnp.where(ok, nsk2, INF)
+        nsv2 = jnp.where(ok, nsv2, EMPTY_VAL)
+        # remainder back to the buckets (re-split the list)
+        rem_total = par.par_count - k_extract
+        rk = _shift_left(fk, k_extract, INF)
+        rv = _shift_left(fv, k_extract, EMPTY_VAL)
+        newpar, dropped = _redistribute(cfg, rk, rv, rem_total)
+        return (newpar, nsk2, nsv2, nlen, out3_k, out3_v, served,
+                jnp.ones((), _I32), dropped)
+
+    def no_move(par, nsk, nsv, new_len):
+        z = jnp.zeros((), _I32)
+        return (par, nsk, nsv, new_len,
+                jnp.full((cfg.par_cap,), INF, _F32),
+                jnp.full((cfg.par_cap,), EMPTY_VAL, _I32), z, z, z)
+
+    (par, nsk, nsv, new_len, out3_k, out3_v, n_rm_par, moved,
+     n_drop2) = jax.lax.cond(need_move, do_move, no_move,
+                             par, nsk, nsv, new_len)
+
+    # -- 7. adaptive detach policy (paper §2.1, N=1000 / M=100 / [8,65536]) --
+    from repro.core.adaptive import update_detach
+    ins = state.ins_since_move + n_addseq
+    new_detach = update_detach(cfg, state.detach_n, ins)
+    detach_n = jnp.where(moved > 0, new_detach, state.detach_n)
+    ins_since_move = jnp.where(moved > 0, 0, ins).astype(_I32)
+
+    # -- 8. chopHead: fold the head back when removals go quiet --
+    quiet = jnp.where(rm_count > 0, 0, state.quiet_ticks + 1).astype(_I32)
+    do_chop_pred = (quiet >= cfg.chop_patience) & (new_len > 0)
+
+    def do_chop(par, nsk, nsv, new_len):
+        fk, fv = flatten_parallel(cfg, par)
+        allk = jnp.concatenate([fk, nsk])
+        allv = jnp.concatenate([fv, nsv])
+        allk, allv = _sort_kv(allk, allv)
+        total = par.par_count + new_len
+        newpar, dropped = _redistribute(cfg, allk, allv, total)
+        return (newpar, jnp.full((SC,), INF, _F32),
+                jnp.full((SC,), EMPTY_VAL, _I32), jnp.zeros((), _I32),
+                jnp.ones((), _I32), dropped)
+
+    def no_chop(par, nsk, nsv, new_len):
+        z = jnp.zeros((), _I32)
+        return par, nsk, nsv, new_len, z, z
+
+    par, nsk, nsv, new_len, chopped, n_drop3 = jax.lax.cond(
+        do_chop_pred, do_chop, no_chop, par, nsk, nsv, new_len)
+    quiet = jnp.where(chopped > 0, 0, quiet)
+
+    # -- 9. assemble the removed stream: [imm elim | merged prefix | moved] --
+    ridx = jnp.arange(R, dtype=_I32)
+    seg2 = jnp.clip(ridx - n_imm, 0, M - 1)
+    seg3 = jnp.clip(ridx - n_imm - s, 0, cfg.par_cap - 1)
+    rm_keys = jnp.where(
+        ridx < n_imm, ak[jnp.clip(ridx, 0, A - 1)],
+        jnp.where(ridx < n_imm + s, mk[seg2], out3_k[seg3]))
+    rm_vals = jnp.where(
+        ridx < n_imm, av[jnp.clip(ridx, 0, A - 1)],
+        jnp.where(ridx < n_imm + s, mv[seg2], out3_v[seg3]))
+    requested = ridx < rm_count
+    rm_keys = jnp.where(requested, rm_keys, INF)
+    rm_vals = jnp.where(requested, rm_vals, EMPTY_VAL)
+    rm_served = requested & (rm_keys < INF)
+    n_empty = rm_count - rm_served.sum(dtype=_I32)
+
+    # -- 10. minValue / lastSeq maintenance --
+    seq_head = nsk[0]
+    seq_tail = nsk[jnp.clip(new_len - 1, 0, SC - 1)]
+    last_seq = jnp.where(new_len > 0, seq_tail, -INF)
+    min_value = jnp.where(new_len > 0, seq_head, par.par_min)
+
+    st = state.stats
+    stats = PQStats(
+        add_imm_elim=st.add_imm_elim + n_imm,
+        add_upc_elim=st.add_upc_elim + n_upc,
+        add_seq=st.add_seq + n_addseq,
+        add_par=st.add_par + n_par_adds,
+        rm_seq=st.rm_seq + n_rm_seq,
+        rm_par=st.rm_par + n_rm_par,
+        rm_empty=st.rm_empty + n_empty,
+        n_movehead=st.n_movehead + moved,
+        n_chophead=st.n_chophead + chopped,
+        n_rebalance=st.n_rebalance + n_rebal,
+        n_spill=st.n_spill + (spill_cnt > 0).astype(_I32),
+        n_dropped=st.n_dropped + n_drop + n_drop2 + n_drop3,
+        n_ticks=st.n_ticks + 1,
+        n_removes=st.n_removes + rm_count,
+        local_elim=st.local_elim,   # only the distributed wrapper adds here
+    )
+
+    new_state = PQState(
+        seq_keys=nsk, seq_vals=nsv, seq_len=new_len.astype(_I32),
+        buckets=par.buckets, bvals=par.bvals, bcounts=par.bcounts,
+        splitters=par.splitters, par_min=par.par_min,
+        par_count=par.par_count,
+        min_value=min_value, last_seq=last_seq,
+        detach_n=detach_n, ins_since_move=ins_since_move,
+        quiet_ticks=quiet, stats=stats,
+    )
+    return new_state, TickResult(rm_keys, rm_vals, rm_served)
+
+
+# ---------------------------------------------------------------------------
+# convenience wrappers
+# ---------------------------------------------------------------------------
+
+def size(state: PQState) -> jnp.ndarray:
+    return state.seq_len + state.par_count
+
+
+def peek_min(state: PQState) -> jnp.ndarray:
+    return state.min_value
+
+
+def add_batch(cfg: PQConfig, state: PQState, keys, vals=None):
+    """Insert-only tick (pads/masks to a_max)."""
+    n = keys.shape[0]
+    if n > cfg.a_max:
+        raise ValueError(f"batch of {n} adds > a_max={cfg.a_max}")
+    if vals is None:
+        vals = jnp.arange(n, dtype=_I32)
+    ak = jnp.full((cfg.a_max,), 0.0, _F32).at[:n].set(keys.astype(_F32))
+    av = jnp.full((cfg.a_max,), EMPTY_VAL, _I32).at[:n].set(vals.astype(_I32))
+    mask = jnp.zeros((cfg.a_max,), bool).at[:n].set(True)
+    new_state, _ = tick(cfg, state, ak, av, mask, jnp.zeros((), _I32))
+    return new_state
+
+
+def remove_batch(cfg: PQConfig, state: PQState, count):
+    """Remove-only tick."""
+    ak = jnp.full((cfg.a_max,), INF, _F32)
+    av = jnp.full((cfg.a_max,), EMPTY_VAL, _I32)
+    mask = jnp.zeros((cfg.a_max,), bool)
+    return tick(cfg, state, ak, av, mask, jnp.asarray(count, _I32))

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLM, make_batch
+from repro.data.priority_sampler import PrioritySampler
+
+__all__ = ["SyntheticLM", "make_batch", "PrioritySampler"]

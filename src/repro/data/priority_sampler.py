@@ -1,0 +1,70 @@
+"""Loss-prioritized curriculum sampling on the adaptive priority queue.
+
+The second framework integration of the paper's structure (after the
+serving scheduler): example *groups* (shards of the stream) carry a
+priority key = -EMA(loss) + staleness bonus.  Each training step:
+
+* ``removeMin() × k`` selects the next groups to train on (highest loss
+  first — the min-key convention stores negated priorities);
+* after the step, groups are re-``add()``-ed with their refreshed key —
+  an add whose key beats the current minimum can *eliminate* against the
+  next step's removal without touching the queue (the hot-example fast
+  path);
+* the staleness bonus guarantees every group is revisited (no
+  starvation), mirroring the paper's aging-based upcoming elimination.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import PQConfig
+from repro.serving.scheduler import PQScheduler, Request
+
+
+@dataclasses.dataclass
+class GroupStat:
+    gid: int
+    ema_loss: float = 10.0
+    last_step: int = 0
+
+
+class PrioritySampler:
+    def __init__(self, n_groups: int, *, ema: float = 0.9,
+                 staleness_weight: float = 0.01,
+                 cfg: Optional[PQConfig] = None, seed: int = 0):
+        self.groups = {g: GroupStat(g) for g in range(n_groups)}
+        self.ema = ema
+        self.staleness_weight = staleness_weight
+        self.sched = PQScheduler(cfg)
+        self.step = 0
+        # enqueue everything initially with random tie-break
+        rng = np.random.default_rng(seed)
+        arrivals = [Request(rid=g, priority=float(-10.0 + 1e-3 * rng.random()))
+                    for g in self.groups]
+        self.sched.submit_and_acquire(arrivals, 0)
+
+    def _key(self, g: GroupStat) -> float:
+        stale = (self.step - g.last_step) * self.staleness_weight
+        return float(-(g.ema_loss + stale))
+
+    def next_groups(self, k: int) -> List[int]:
+        got = self.sched.submit_and_acquire([], k)
+        return [r.rid for r in got]
+
+    def report(self, gid: int, loss: float) -> None:
+        g = self.groups[gid]
+        g.ema_loss = self.ema * g.ema_loss + (1 - self.ema) * float(loss)
+        g.last_step = self.step
+
+    def requeue(self, gids: List[int]) -> None:
+        self.step += 1
+        arrivals = [Request(rid=g, priority=self._key(self.groups[g]))
+                    for g in gids]
+        self.sched.submit_and_acquire(arrivals, 0)
+
+    def breakdown(self) -> Dict[str, int]:
+        return self.sched.stats()

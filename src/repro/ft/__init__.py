@@ -1,0 +1,6 @@
+from repro.ft.heartbeat import FailureDetector, HeartbeatTable
+from repro.ft.straggler import StragglerQueue
+from repro.ft.elastic import ElasticTrainer
+
+__all__ = ["FailureDetector", "HeartbeatTable", "StragglerQueue",
+           "ElasticTrainer"]

@@ -1,0 +1,53 @@
+"""Elastic training: checkpoint/restart across topology changes.
+
+The recovery path at pod scale: a failure detector (repro.ft.heartbeat)
+marks a slice dead -> the job restarts on the surviving mesh -> the
+checkpoint manifest (global shapes + specs, repro.ckpt) re-shards every
+leaf onto the new mesh -> the data pipeline seeks to the saved step
+(repro.data.synthetic is (seed, step)-pure) -> training resumes bit-exact
+up to reduction order.
+
+``ElasticTrainer`` packages that loop for tests and the train example; the
+mesh transition itself is just `restore(..., shardings_on_new_mesh)`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.ckpt import CheckpointManager
+
+
+class ElasticTrainer:
+    def __init__(self, ckpt_dir, *, save_every: int = 50, keep: int = 3):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep)
+        self.save_every = save_every
+
+    def run(self, state, step_fn: Callable, data_fn: Callable,
+            n_steps: int, *, start_step: int = 0,
+            fail_at: Optional[int] = None, shardings=None):
+        """Drive training; optionally simulate a crash at `fail_at`.
+
+        Returns (state, last_step, metrics_history).  After a simulated
+        failure the caller restarts via `resume()` — possibly on a
+        different mesh (pass the new shardings).
+        """
+        history = []
+        step = start_step
+        while step < n_steps:
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"simulated node failure at step {step}")
+            batch = data_fn(step)
+            state, metrics = step_fn(state, batch)
+            step += 1
+            history.append({k: float(v) for k, v in metrics.items()})
+            if step % self.save_every == 0 or step == n_steps:
+                self.mgr.save(step, state)
+        return state, step, history
+
+    def resume(self, state_like, shardings=None):
+        """Restore the latest checkpoint onto the CURRENT topology."""
+        state, step = self.mgr.restore(state_like, shardings)
+        return state, step

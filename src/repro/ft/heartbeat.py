@@ -1,0 +1,53 @@
+"""Coordinator-side failure detection (simulated clock for tests).
+
+At 1000+ nodes, failures are routine: the coordinator keeps a heartbeat
+table; a worker missing ``suspect_after`` seconds is *suspected* and
+missing ``dead_after`` is *dead*, triggering the elastic path
+(repro.ft.elastic): shrink the mesh by the failed data slice, remesh from
+the last durable checkpoint, resume.  The detector is pure (injected
+clock) so tests drive it deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Set
+
+
+@dataclasses.dataclass
+class HeartbeatTable:
+    last_seen: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, worker: int, now: float) -> None:
+        self.last_seen[worker] = now
+
+    def silent_for(self, worker: int, now: float) -> float:
+        return now - self.last_seen.get(worker, -float("inf"))
+
+
+class FailureDetector:
+    def __init__(self, workers: List[int], *, suspect_after: float = 10.0,
+                 dead_after: float = 30.0):
+        self.table = HeartbeatTable()
+        self.workers = set(workers)
+        self.suspect_after = suspect_after
+        self.dead_after = dead_after
+        self.dead: Set[int] = set()
+
+    def beat(self, worker: int, now: float) -> None:
+        if worker in self.workers:
+            self.table.beat(worker, now)
+
+    def check(self, now: float) -> Dict[str, Set[int]]:
+        suspected, dead = set(), set()
+        for w in self.workers - self.dead:
+            silent = self.table.silent_for(w, now)
+            if silent >= self.dead_after:
+                dead.add(w)
+            elif silent >= self.suspect_after:
+                suspected.add(w)
+        self.dead |= dead
+        return {"suspected": suspected, "dead": dead}
+
+    def alive(self) -> Set[int]:
+        return self.workers - self.dead

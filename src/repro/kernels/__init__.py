@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the PQ hot paths (+ jnp oracles in ref.py).
+
+* bitonic.py      — data-parallel sorting network (the elimination-array
+                    scan vectorized); grid over rows, VMEM blocks.
+* merge_consume.py — rank-merge via one-hot MXU matmul scatter (the
+                    combine stage: SL::addSeq + batched removeMin).
+* radix_select.py — MSB-first radix threshold select (SL::moveHead top-k
+                    without a full sort).
+* ops.py          — public jit'd wrappers, backend= pallas|jnp|auto.
+* ref.py          — pure-jnp oracles; every kernel test asserts against
+                    these across shape/dtype sweeps.
+"""
+
+from repro.kernels.ops import (merge_sorted, select_k_smallest,
+                               select_threshold, sort_kvf)
+
+__all__ = ["merge_sorted", "select_k_smallest", "select_threshold",
+           "sort_kvf"]

@@ -1,0 +1,95 @@
+"""Public jit'd wrappers over the Pallas kernels, with jnp fallbacks.
+
+Backend selection:
+* ``"pallas"`` — pl.pallas_call kernels (interpret=True off-TPU, so the
+  kernel *body* executes on CPU for correctness tests; on TPU the same
+  call lowers through Mosaic).
+* ``"jnp"`` — pure-jnp reference path (the oracle, also the XLA-native
+  fallback).
+* ``"auto"`` — pallas on TPU, jnp elsewhere (CPU benchmarks should not pay
+  interpret-mode overhead).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitonic import bitonic_sort_kvf
+from repro.kernels.merge_consume import merge_sorted_kvf
+from repro.kernels.radix_select import radix_select_threshold
+
+INF = jnp.inf
+_I32 = jnp.int32
+
+#: interpret=True executes kernel bodies in Python on CPU (validation);
+#: on a real TPU backend this flips to False and Mosaic compiles them.
+INTERPRET = jax.default_backend() != "tpu"
+
+_VAL_EXACT_BOUND = 1 << 24  # payloads ride through f32 matmuls
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def sort_kvf(keys, vals, flags, *, backend: str = "auto"):
+    """Co-sort (keys, vals, flags) by key ascending. 1D or [rows, n]."""
+    if _resolve(backend) == "jnp":
+        return ref.ref_sort_kvf(keys, vals, flags)
+    squeeze = keys.ndim == 1
+    if squeeze:
+        keys, vals, flags = keys[None], vals[None], flags[None]
+    ok, ov, of = bitonic_sort_kvf(keys, vals.astype(_I32),
+                                  flags.astype(_I32), interpret=INTERPRET)
+    if squeeze:
+        ok, ov, of = ok[0], ov[0], of[0]
+    return ok, ov, of
+
+
+def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
+                 backend: str = "auto"):
+    """Merge two sorted INF-padded streams; ties resolve a-first."""
+    if _resolve(backend) == "jnp":
+        return ref.ref_merge_sorted(ak, av, af, bk, bv, bf)
+    total = ak.shape[0] + bk.shape[0]
+    while total % tile:
+        tile //= 2
+    return merge_sorted_kvf(ak, av.astype(_I32), af.astype(_I32),
+                            bk, bv.astype(_I32), bf.astype(_I32),
+                            tile=tile, interpret=INTERPRET)
+
+
+def select_threshold(keys, k, *, backend: str = "auto"):
+    """(tau, n_below) with tau the k-th smallest of keys (INF-padded)."""
+    if _resolve(backend) == "jnp":
+        return ref.ref_select_threshold(keys, k)
+    return radix_select_threshold(keys, jnp.asarray(k, _I32),
+                                  interpret=INTERPRET)
+
+
+def select_k_smallest(keys, vals, k, k_max: int, *, backend: str = "auto"):
+    """The k smallest (key, val) pairs, sorted ascending, INF-padded to k_max.
+
+    Pallas path: radix threshold (O(32 L)) + cumsum compaction + bitonic
+    sort of the k_max survivors — avoids the O(L log L) full sort the jnp
+    oracle performs.  k must be <= k_max; k_max a power of two for pallas.
+    """
+    if _resolve(backend) == "jnp":
+        return ref.ref_select_k(keys, vals, k, k_max)
+    k = jnp.minimum(jnp.asarray(k, _I32), k_max)
+    tau, n_below = select_threshold(keys, k, backend="pallas")
+    below = keys < tau
+    eq = keys == tau
+    eq_rank = jnp.cumsum(eq.astype(_I32)) - 1
+    sel = below | (eq & (eq_rank < (k - n_below)))
+    pos = jnp.where(sel, jnp.cumsum(sel.astype(_I32)) - 1, k_max)
+    out_k = jnp.full((k_max,), INF, keys.dtype).at[pos].set(keys, mode="drop")
+    out_v = jnp.full((k_max,), -1, _I32).at[pos].set(vals.astype(_I32),
+                                                     mode="drop")
+    zeros = jnp.zeros((k_max,), _I32)
+    out_k, out_v, _ = sort_kvf(out_k, out_v, zeros, backend="pallas")
+    return out_k, out_v

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+def ref_sort_kvf(keys, vals, flags):
+    """Co-sort rows of (keys, vals, flags) by key ascending (stable)."""
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return (jnp.take_along_axis(keys, order, axis=-1),
+            jnp.take_along_axis(vals, order, axis=-1),
+            jnp.take_along_axis(flags, order, axis=-1))
+
+
+def ref_merge_sorted(ak, av, af, bk, bv, bf):
+    """Merge two sorted (INF-padded) streams; ties resolve a-first.
+
+    Returns merged (keys, vals, flags) of length len(a)+len(b).
+    """
+    n, m = ak.shape[0], bk.shape[0]
+    pa = jnp.arange(n) + jnp.searchsorted(bk, ak, side="left")
+    pb = jnp.arange(m) + jnp.searchsorted(ak, bk, side="right")
+    ok = jnp.zeros((n + m,), ak.dtype).at[pa].set(ak).at[pb].set(bk)
+    ov = jnp.zeros((n + m,), av.dtype).at[pa].set(av).at[pb].set(bv)
+    of = jnp.zeros((n + m,), af.dtype).at[pa].set(af).at[pb].set(bf)
+    return ok, ov, of
+
+
+def ref_select_threshold(keys, k):
+    """(tau, n_below): tau = k-th smallest key; n_below = #{keys < tau}.
+
+    Selecting all keys < tau plus (k - n_below) keys == tau yields exactly
+    the k smallest (INF-padded input; k <= len(keys)).
+    """
+    skeys = jnp.sort(keys)
+    tau = skeys[jnp.clip(k - 1, 0, keys.shape[0] - 1)]
+    tau = jnp.where(k > 0, tau, -INF)
+    n_below = jnp.sum(keys < tau)
+    return tau, n_below
+
+
+def ref_select_k(keys, vals, k, k_max):
+    """The k smallest (key, val) pairs, sorted, padded to k_max with INF."""
+    order = jnp.argsort(keys)
+    sk, sv = keys[order], vals[order]
+    idx = jnp.arange(k_max)
+    return (jnp.where(idx < k, sk[jnp.clip(idx, 0, keys.shape[0] - 1)], INF),
+            jnp.where(idx < k, sv[jnp.clip(idx, 0, keys.shape[0] - 1)], -1))

@@ -1,0 +1,198 @@
+import os
+# Two dry-run-only compiler adjustments (before ANY other import — jax
+# locks devices at first init):
+#  * 512 placeholder host devices for the production meshes;
+#  * disable while-loop LICM: XLA:CPU hoists per-layer FSDP gathers and
+#    dtype converts out of scan loops, materializing whole-layer-stack
+#    f32 buffers (observed: 27.8 -> 10.2 GB temps on the moonshot train
+#    cell; EXPERIMENTS.md §Perf iteration log).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion "
+    + os.environ.get("XLA_EXTRA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+THE FIRST TWO LINES of this module set XLA_FLAGS before any other import —
+jax locks the device count at first init, and the production meshes need
+512 placeholder host devices (16×16 single-pod, 2×16×16 multi-pod).
+
+Usage (one cell per process — a sweep runner isolates failures):
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch gemma-2b --shape train_4k [--multi-pod] \
+        [--out artifacts/dryrun] [--save-hlo]
+
+Emits a JSON artifact with memory_analysis(), cost_analysis(), parsed
+collective bytes, and the roofline terms (EXPERIMENTS.md §Dry-run /
+§Roofline read these).
+"""
+
+import argparse      # noqa: E402
+import gzip          # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_config                      # noqa: E402
+from repro.configs.shapes import SHAPES, cell_is_skipped, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.serve import lower_prefill_step, lower_serve_step  # noqa: E402
+from repro.launch.train import TrainConfig, lower_train_step  # noqa: E402
+from repro.roofline import hw                             # noqa: E402
+from repro.roofline.analysis import Roofline, model_flops  # noqa: E402
+from repro.roofline.hlo_stats import analyze              # noqa: E402
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               tcfg: TrainConfig = None, chunked_prefill: bool = False):
+    tcfg = tcfg or TrainConfig()
+    cfg = get_config(arch)
+    if cell_is_skipped(cfg, shape):
+        return None, "SKIP"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    if spec.kind == "train":
+        lowered = lower_train_step(cfg, tcfg, mesh, specs)
+    elif spec.kind == "prefill":
+        lowered = lower_prefill_step(cfg, mesh, batch=spec.batch,
+                                     seq_len=spec.seq, specs=specs,
+                                     chunked=chunked_prefill)
+    else:
+        lowered = lower_serve_step(cfg, mesh, batch=spec.batch,
+                                   seq_len=spec.seq, specs=specs)
+    return lowered, spec
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             save_hlo: bool = False, tcfg: TrainConfig = None,
+             chunked_prefill: bool = False) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "chips": chips}
+
+    lowered, spec = lower_cell(arch, shape, multi_pod, tcfg,
+                               chunked_prefill)
+    if lowered is None:
+        result["status"] = "SKIP"
+        result["reason"] = f"{arch} skips {shape} (see DESIGN.md)"
+        return result
+    t_lower = time.time() - t0
+
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    result["memory"] = {
+        k: int(getattr(mem, k))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes")
+        if hasattr(mem, k)}
+    per_dev_bytes = (result["memory"].get("argument_size_in_bytes", 0)
+                     + result["memory"].get("temp_size_in_bytes", 0)
+                     - result["memory"].get("alias_size_in_bytes", 0))
+    result["memory"]["per_device_total"] = per_dev_bytes
+    result["memory"]["fits_hbm"] = bool(per_dev_bytes < hw.HBM_BYTES)
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    result["cost_analysis_raw"] = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "note": "XLA counts while bodies once; see cost (trip-corrected)"}
+
+    # trip-count-aware statistics from the optimized per-device module
+    hlo = compiled.as_text()
+    st = analyze(hlo)
+    result["cost"] = {"flops": st.flops,
+                      "bytes_accessed": st.hbm_bytes_adj,
+                      "bytes_accessed_upper": st.hbm_bytes}
+    result["collectives"] = st.collective_bytes
+    result["n_whiles"] = st.n_whiles
+    coll_total = st.coll_total
+
+    # roofline (per-device program => per-chip terms); the memory term
+    # uses the VMEM-adjusted traffic (tensors >= 8 MiB; smaller loop
+    # intermediates stay on-chip under Mosaic) — the raw fusion-boundary
+    # sum is kept as bytes_accessed_upper
+    link_bw = hw.DCN_BW if multi_pod else hw.ICI_BW
+    rl = Roofline.from_measurements(st.flops, st.hbm_bytes_adj,
+                                    coll_total, link_bw=link_bw)
+    # train/prefill process batch*seq tokens; decode emits one per row
+    tokens = spec.batch * (spec.seq if spec.kind in ("train", "prefill")
+                           else 1)
+    mf_total = model_flops(cfg, spec.kind, tokens)
+    mf_dev = mf_total / chips
+    result["roofline"] = {
+        "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s, "dominant": rl.dominant,
+        "bound_step_s": rl.bound_step_time(),
+        "model_flops_per_dev": mf_dev,
+        "useful_flops_ratio": (mf_dev / rl.flops) if rl.flops else 0.0,
+        "mfu_bound": rl.mfu(mf_dev),
+    }
+    result["timing"] = {"lower_s": round(t_lower, 1),
+                        "compile_s": round(t_compile, 1)}
+    result["status"] = "OK"
+
+    if save_hlo:
+        hdir = out_dir / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        with gzip.open(hdir / f"{arch}__{shape}__{mesh_name}.hlo.gz",
+                       "wt") as f:
+            f.write(hlo)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence parallelism (perf knob, §Perf)")
+    ap.add_argument("--opt8", action="store_true",
+                    help="8-bit Adam moments (perf knob, §Perf)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="scan-over-chunks prefill (perf knob, §Perf)")
+    ap.add_argument("--n-micro", type=int, default=8)
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for perf variants")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS")
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tcfg = TrainConfig(n_micro=args.n_micro, sequence_parallel=args.sp,
+                       opt_8bit=args.opt8)
+    res = run_cell(args.arch, args.shape, args.multi_pod, out_dir,
+                   save_hlo=args.save_hlo, tcfg=tcfg,
+                   chunked_prefill=args.chunked_prefill)
+    if args.sp or args.opt8 or args.chunked_prefill \
+            or args.n_micro != 8 or args.tag:
+        res["variant"] = {"sp": args.sp, "opt8": args.opt8,
+                          "chunked_prefill": args.chunked_prefill,
+                          "n_micro": args.n_micro, "tag": args.tag}
+    mesh_name = res["mesh"]
+    suffix = f"__{args.tag}" if args.tag else ""
+    path = out_dir / f"{args.arch}__{args.shape}__{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(res, indent=2))
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first
+init).
+
+Topology (TPU v5e): 16×16 = 256 chips per pod; the multi-pod mesh adds a
+leading ``pod`` axis (2 pods = 512 chips) that crosses DCN.  Axis roles:
+``data`` = batch/ZeRO sharding, ``model`` = tensor/expert parallelism,
+``pod`` = slow-link data parallelism (gradient reduction only, optionally
+int8-compressed — repro.optim.compress).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """All local devices on a single 'data' axis (tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,176 @@
+"""Serving steps: prefill + decode with sharded KV caches.
+
+``decode_*`` / ``long_*`` assignment shapes lower ``serve_step`` — one new
+token per sequence against a seq_len cache.  Cache sharding picks, per
+leaf, the best divisible axis: batch over ``data``; kv-heads over
+``model`` when divisible, else head_dim (always divisible on the assigned
+set — head dims are 64/80/128/256).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import use_mesh
+from repro.launch.train import param_spec
+from repro.models import transformer as tf
+from repro.models.arch_config import ArchConfig
+
+
+def cache_leaf_spec(shape, mesh: Mesh) -> P:
+    """[reps, B, ...]: B -> data; for 5-D KV caches [R, B, S, g, hd],
+    prefer sharding the SEQUENCE dim over `model`.
+
+    Sharding a contraction dim (hd) makes GSPMD all-gather the whole
+    cache per decode step (observed: a 403 MB f32 gather on the whisper
+    decode cell — §Perf B); with S sharded, QK scores and PV reduce
+    locally per shard and only KB-scale stats cross the interconnect
+    (distributed flash decode).  Falls back to the last divisible feature
+    dim (e.g. SSM states, odd sequence lengths).
+    """
+    m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    parts = [None] * len(shape)
+    if len(shape) >= 2:
+        d = mesh.shape.get("data", 1)
+        if shape[1] % d == 0 and shape[1] >= d:
+            parts[1] = "data"
+    if len(shape) == 5 and shape[2] % m == 0 and shape[2] >= m:
+        parts[2] = "model"     # the sequence dim of [R, B, S, g, hd]
+        return P(*parts)
+    # fall back: the last dim divisible by the model axis (feature-most)
+    for i in range(len(shape) - 1, 1, -1):
+        if shape[i] % m == 0 and shape[i] >= m:
+            parts[i] = "model"
+            break
+    return P(*parts)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, caches_shape):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, cache_leaf_spec(s.shape, mesh)),
+        caches_shape)
+
+
+def params_shardings(cfg: ArchConfig, mesh: Mesh, params_shape):
+    """Serving weights: model-parallel + data-dim sharding (FSDP-style).
+
+    Model-parallel alone leaves each data replica holding params/16 —
+    29 GB/chip for the 235B arch. Sharding the second dim over `data`
+    (per-layer all-gather inside the scan, overlapped by the scheduler)
+    brings it to 1.8 GB/chip.
+    """
+    import functools
+    from repro.launch.train import sanitize_spec, zero1_spec
+    specs = jax.tree_util.tree_map_with_path(
+        functools.partial(param_spec, tied=cfg.tie_embeddings),
+        params_shape)
+    specs = jax.tree.map(
+        lambda ps, s: zero1_spec(sanitize_spec(ps, s.shape, mesh),
+                                 s.shape, mesh),
+        specs, params_shape, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, caches, token, pos):
+        return tf.decode_step(cfg, params, token, caches, pos)
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, caches, tokens, **extras):
+        return tf.prefill(cfg, params, tokens, caches, **extras)
+    return prefill_step
+
+
+def lower_serve_step(cfg: ArchConfig, mesh: Mesh, *, batch: int,
+                     seq_len: int, specs: Dict[str, Any]):
+    """AOT-lower one decode step for the dry-run (ShapeDtypeStructs only)."""
+    with use_mesh(mesh):
+        params_shape = jax.eval_shape(
+            lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+        caches_shape = jax.eval_shape(
+            lambda: tf.init_decode_caches(cfg, batch, seq_len))
+        if cfg.enc_dec:
+            xkv_shape = jax.eval_shape(_xkv_builder(cfg, batch))
+            caches_shape = {**caches_shape, "xkv": xkv_shape}
+        p_sh = params_shardings(cfg, mesh, params_shape)
+        c_sh = cache_shardings(cfg, mesh, caches_shape)
+        from repro.launch.train import sanitize_spec
+        bax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        t_sh = NamedSharding(mesh, sanitize_spec(
+            P(bax, None), specs["token"].shape, mesh))
+        pos_sh = NamedSharding(mesh, sanitize_spec(
+            P(bax), specs["pos"].shape, mesh))
+
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+                         donate_argnums=(1,))
+        args = (
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sh), params_shape, p_sh),
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sh), caches_shape, c_sh),
+            jax.ShapeDtypeStruct(specs["token"].shape,
+                                 specs["token"].dtype, sharding=t_sh),
+            jax.ShapeDtypeStruct(specs["pos"].shape, specs["pos"].dtype,
+                                 sharding=pos_sh),
+        )
+        return jitted.lower(*args)
+
+
+def lower_prefill_step(cfg: ArchConfig, mesh: Mesh, *, batch: int,
+                       seq_len: int, specs: Dict[str, Any],
+                       chunked: bool = False, chunk_len: int = 2048):
+    with use_mesh(mesh):
+        params_shape = jax.eval_shape(
+            lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+        # prefill caches sized to the prompt (the engine re-materializes
+        # decode-length caches after admission)
+        cache_len = seq_len + (cfg.frontend_tokens
+                               if cfg.frontend == "vit" else 0)
+        caches_shape = jax.eval_shape(
+            lambda: tf.init_decode_caches(cfg, batch, cache_len))
+        p_sh = params_shardings(cfg, mesh, params_shape)
+        c_sh = cache_shardings(cfg, mesh, caches_shape)
+        bax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+        extras = {k: v for k, v in specs.items() if k != "tokens"}
+        e_sh = {k: NamedSharding(mesh, P(bax, None, None)) for k in extras}
+
+        if chunked:
+            def step(params, caches, tokens, **_):
+                return tf.prefill_chunked(cfg, params, tokens, caches,
+                                          chunk_len=chunk_len)
+        else:
+            step = make_prefill_step(cfg)
+        jitted = jax.jit(
+            lambda params, caches, tokens, extras: step(
+                params, caches, tokens, **extras),
+            in_shardings=(p_sh, c_sh, NamedSharding(mesh, P(bax, None)),
+                          e_sh),
+            donate_argnums=(1,))
+        args = (
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sh), params_shape, p_sh),
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sh), caches_shape, c_sh),
+            jax.ShapeDtypeStruct(specs["tokens"].shape,
+                                 specs["tokens"].dtype),
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=e_sh[k])
+             for k, v in extras.items()},
+        )
+        return jitted.lower(*args)
+
+
+def _xkv_builder(cfg: ArchConfig, batch: int):
+    def build():
+        k = jnp.zeros((cfg.pattern_reps, batch, cfg.enc_seq,
+                       cfg.n_kv_heads, cfg.head_dim), jnp.dtype(cfg.dtype))
+        return (k, k)
+    return build

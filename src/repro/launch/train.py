@@ -1,0 +1,335 @@
+"""Training step: pjit + grad accumulation + AdamW + ZeRO-1 sharding.
+
+The step lowered by the dry-run.  Structure:
+
+* **Microbatch scan.**  The global batch is split into ``n_micro``
+  microbatches accumulated in a ``lax.scan`` — this bounds logits/activation
+  memory (a 256k-vocab 1M-token batch cannot materialize logits at once)
+  and is the hook for straggler-tolerant execution (repro.ft.straggler).
+* **ZeRO-1.**  f32 Adam moments and the f32 grad-accumulation buffer are
+  additionally sharded over ``data`` (zero1_spec), dividing optimizer
+  memory by the data-parallel degree.  bf16 params stay replicated across
+  ``data`` (cheap) and sharded over ``model`` per param_spec.
+* **Collective overlap.**  Gradients come out of the scan as per-leaf
+  reductions that XLA's latency-hiding scheduler overlaps with the next
+  microbatch's backward (no single fused tail reduction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import use_mesh
+from repro.models import transformer as tf
+from repro.models.arch_config import ArchConfig
+from repro.optim import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw8 import AdamW8State, adamw8_init, adamw8_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_micro: int = 8
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    zero1: bool = True
+    # FSDP: shard bf16 params over `data` as well (per-layer all-gather in
+    # the scan). Required for >~30B params on 16 GB/chip; the gather is
+    # overlapped with compute by the latency-hiding scheduler.
+    fsdp: bool = True
+    # sequence parallelism on the residual carry (perf knob; §Perf)
+    sequence_parallel: bool = False
+    # 8-bit Adam moments (repro.optim.adamw8): 8 -> ~1.03 bytes/param of
+    # optimizer state; the lever that fits the 235B cell (§Perf)
+    opt_8bit: bool = False
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+# ---------------------------------------------------------------------------
+# parameter / state sharding rules
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "wi_gate", "wi_up", "in_proj", "w_x", "w_if",
+        "router"}   # [d_in, d_out-sharded]
+_ROW = {"wo", "out_proj"}  # [d_in-sharded, d_out]
+_EMBED = {"embed", "unembed"}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return p.key
+    return ""
+
+
+def _stacked(path) -> bool:
+    head = path[0]
+    return (isinstance(head, jax.tree_util.DictKey)
+            and head.key in ("stack", "enc_stack", "cross"))
+
+
+def param_spec(path, leaf, *, tied: bool = True) -> P:
+    """Logical partitioning of one parameter leaf on a (data, model) mesh.
+
+    Embeddings stay vocab-sharded; untied archs do the LOOKUP as a
+    one-hot matmul (repro.models.layers.embed_apply) so both directions
+    are pure contractions — a D-sharded table trips a GSPMD gather-
+    partitioning bug, and a vocab-sharded `take` replicates the embedding
+    gradient (2.5 GB f32 on the qwen3 cell).  See EXPERIMENTS.md §Perf.
+    """
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    extra = 1 if _stacked(path) else 0   # leading reps axis from the scan
+
+    if name in _EMBED:
+        return P("model", None)
+    core = nd - extra
+    if name in _COL and core == 2:
+        spec = (None, "model")
+    elif name in _ROW and core == 2:
+        spec = ("model", None)
+    elif name in ("wi_gate", "wi_up", "wo") and core == 3:  # MoE experts
+        spec = ("model", None, None)
+    else:
+        spec = (None,) * core
+    return P(*((None,) * extra + spec))
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding axes whose size does not divide the dim (e.g. tiny
+    gate projections like xLSTM's [D, 2H] with 2H=8 on a 16-way model
+    axis); GSPMD requires exact divisibility."""
+    def axes_of(p):
+        if p is None:
+            return ()
+        return (p,) if isinstance(p, str) else tuple(p)
+
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for p, n in zip(parts, shape):
+        keep = []
+        prod = 1
+        for a in axes_of(p):
+            if a in mesh.shape and n % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        out.append(tuple(keep) if len(keep) > 1 else
+                   (keep[0] if keep else None))
+    return P(*out)
+
+
+def zero1_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Add the `data` axis to the first unsharded, divisible dim (ZeRO-1).
+
+    Idempotent: specs already carrying `data` (e.g. FSDP-sharded params)
+    are returned unchanged.  Handles tuple axes like ('model', 'data').
+    """
+    if "data" not in mesh.axis_names:
+        return spec
+
+    def axes_of(p):
+        if p is None:
+            return ()
+        return (p,) if isinstance(p, str) else tuple(p)
+
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if any("data" in axes_of(p) for p in parts):
+        return spec
+    d = mesh.shape["data"]
+    for i, (p, n) in enumerate(zip(parts, shape)):
+        cur = 1
+        for a in axes_of(p):
+            cur *= mesh.shape[a]
+        local = n // cur
+        if n % cur == 0 and local % d == 0 and local >= d:
+            parts[i] = "data" if p is None else axes_of(p) + ("data",)
+            return P(*parts)
+    return spec
+
+
+_NO_FSDP = _EMBED | {"router"}
+# embed/unembed: FSDP over the vocab dim turns every token lookup into a
+# cross-(model×data) gather (observed: replicated f32 [T, D] lookups);
+# router: shard_map EP wants it replicated and it is ~2 MB.
+
+
+def train_param_specs(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh,
+                      params_shape):
+    """PartitionSpec tree for params (model-parallel + optional FSDP)."""
+    pspecs = jax.tree_util.tree_map_with_path(
+        functools.partial(param_spec, tied=cfg.tie_embeddings),
+        params_shape)
+    pspecs = jax.tree.map(
+        lambda ps, s: sanitize_spec(ps, s.shape, mesh), pspecs,
+        params_shape, is_leaf=lambda x: isinstance(x, P))
+    if tcfg.fsdp:
+        def fsdp_spec(path, ps, s):
+            if _leaf_name(path) in _NO_FSDP:
+                return ps
+            return zero1_spec(ps, s.shape, mesh)
+        pspecs = jax.tree_util.tree_map_with_path(
+            fsdp_spec, pspecs, params_shape,
+            is_leaf=lambda x: isinstance(x, P))
+    return pspecs
+
+
+def state_shardings(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh,
+                    state_shape) -> TrainState:
+    """NamedShardings for a TrainState (from eval_shape output)."""
+    pspecs = train_param_specs(cfg, tcfg, mesh, state_shape.params)
+
+    def opt_spec(ps, shape):
+        spec = sanitize_spec(ps, shape.shape, mesh)
+        if tcfg.zero1:
+            spec = zero1_spec(spec, shape.shape, mesh)
+        return spec
+
+    as_sh = lambda t: jax.tree.map(  # noqa: E731
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+
+    opt_shape = state_shape.opt
+    if hasattr(opt_shape, "q_mu"):   # AdamW8State
+        # int8 moments share the param layout; blockwise scales drop the
+        # last dim (keep the leading dims of the param spec)
+        def scale_spec(ps, s):
+            return opt_spec(P(*list(ps)[:max(len(s.shape) - 1, 0)]), s)
+
+        opt_sh = AdamW8State(
+            step=NamedSharding(mesh, P()),
+            q_mu=as_sh(jax.tree.map(opt_spec, pspecs, opt_shape.q_mu)),
+            s_mu=as_sh(jax.tree.map(scale_spec, pspecs, opt_shape.s_mu)),
+            q_nu=as_sh(jax.tree.map(opt_spec, pspecs, opt_shape.q_nu)),
+            s_nu=as_sh(jax.tree.map(scale_spec, pspecs, opt_shape.s_nu)))
+        return TrainState(params=as_sh(pspecs), opt=opt_sh)
+
+    mu = jax.tree.map(opt_spec, pspecs, opt_shape.mu)
+    nu = jax.tree.map(opt_spec, pspecs, opt_shape.nu)
+    return TrainState(
+        params=as_sh(pspecs),
+        opt=AdamWState(step=NamedSharding(mesh, P()), mu=as_sh(mu),
+                       nu=as_sh(nu)))
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh) -> Dict[str, NamedSharding]:
+    bax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    out = {"tokens": NamedSharding(mesh, P(bax, None)),
+           "labels": NamedSharding(mesh, P(bax, None))}
+    if cfg.frontend == "vit":
+        out["prefix_embeds"] = NamedSharding(mesh, P(bax, None, None))
+    if cfg.frontend == "audio":
+        out["enc_frames"] = NamedSharding(mesh, P(bax, None, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg: ArchConfig, key,
+                     tcfg: TrainConfig = None) -> TrainState:
+    params = tf.init_params(cfg, key)
+    opt8 = tcfg is not None and tcfg.opt_8bit
+    return TrainState(params=params,
+                      opt=adamw8_init(params) if opt8
+                      else adamw_init(params))
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh):
+    """Returns train_step(state, batch) -> (state, metrics), un-jitted.
+
+    The caller jits with in_shardings from state_shardings()/batch_specs()
+    (the dry-run) or plainly (CPU tests).
+    """
+    def constrain_grads(grads):
+        """Pin the f32 accumulation buffer to the ZeRO layout — without
+        this GSPMD keeps full f32 grads per device (58 GB for the 235B
+        cell) and reduces with all-reduce instead of reduce-scatter."""
+        if mesh is None or mesh.empty:
+            return grads
+        base = jax.tree_util.tree_map_with_path(
+            functools.partial(param_spec, tied=cfg.tie_embeddings), grads)
+        base = jax.tree.map(
+            lambda ps, g: sanitize_spec(ps, g.shape, mesh), base, grads,
+            is_leaf=lambda x: isinstance(x, P))
+        specs = jax.tree.map(
+            lambda ps, g: zero1_spec(ps, g.shape, mesh), base, grads,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, s)), grads, specs)
+
+    def accum_grads(params, batch):
+        b = batch["tokens"].shape[0]
+        n = min(tcfg.n_micro, b)
+
+        def reshape(x):
+            return x.reshape((n, b // n) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def micro_step(acc, mb):
+            loss, _ = tf.loss_fn(cfg, params, mb)
+            grads = jax.grad(lambda p: tf.loss_fn(cfg, p, mb)[0])(params)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n, acc_g, grads)
+            acc_g = constrain_grads(acc_g)
+            return (acc_g, acc_l + loss / n), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        zero = constrain_grads(zero)
+        (grads, loss), _ = jax.lax.scan(micro_step, (zero, 0.0), micro)
+        return grads, loss
+
+    def train_step(state: TrainState, batch):
+        grads, loss = accum_grads(state.params, batch)
+        lr = cosine_schedule(state.opt.step, peak_lr=tcfg.peak_lr,
+                             warmup=tcfg.warmup, total=tcfg.total_steps)
+        update = adamw8_update if tcfg.opt_8bit else adamw_update
+        params, opt, metrics = update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm)
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def lower_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh,
+                     specs: Dict[str, jax.ShapeDtypeStruct]):
+    """AOT-lower the jitted train step for the dry-run (no allocation)."""
+    from repro.dist.sharding import RULES_2D, RULES_3D, sp_rules
+    base = RULES_3D if "pod" in mesh.axis_names else RULES_2D
+    rules = sp_rules(base) if tcfg.sequence_parallel else base
+    with use_mesh(mesh, rules):
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0), tcfg))
+        st_sh = state_shardings(cfg, tcfg, mesh, state_shape)
+        b_sh = batch_specs(cfg, mesh)
+        step = make_train_step(cfg, tcfg, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, {k: b_sh[k] for k in specs}),
+            donate_argnums=(0,))
+        batch_abs = {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+            for k, v in specs.items()}
+        state_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=sh),
+            state_shape, st_sh)
+        return jitted.lower(state_abs, batch_abs)

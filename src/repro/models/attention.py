@@ -1,0 +1,263 @@
+"""Attention: GQA/MQA with RoPE, logit soft-capping, sliding windows,
+flash-style chunked computation, and KV-cache decode.
+
+TPU adaptation notes:
+
+* Training/prefill attention is a two-level ``lax.scan`` over query and
+  key/value chunks with running (max, sum) accumulators — the flash
+  recurrence — so the S×S score matrix is never materialized.  Peak
+  activation per step is [B, H, q_chunk, kv_chunk], independent of S; HLO
+  stays compact because both loops are scans.
+* Decode is a single-token query against the cache: scores [B, H, 1, S]
+  are cheap; no chunking needed.
+* GQA repeats are expressed with an explicit group axis in the einsums
+  (no materialized head broadcast).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch_config import ArchConfig
+from repro.models.layers import dense_init
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """[..., head_dim//2] cos/sin tables for integer positions."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, S, ..., head_dim]; cos/sin: [B|1, S, half].
+
+    Head axes between S and head_dim are broadcast (works for the grouped
+    5-D query [B, S, G, Hg, d] and the 4-D key [B, S, G, d] alike).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    extra = x.ndim - 3
+    bshape = cos.shape[:2] + (1,) * extra + (half,)
+    c = cos.reshape(bshape).astype(x.dtype)
+    s = sin.reshape(bshape).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache. k/v: [B, S_max, n_kv, head_dim]."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype) -> KVCache:
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _softcap(scores, cap: Optional[float]):
+    if cap:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _divisor_near(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (chunk sizes must tile the
+    sequence exactly — whisper's 1500-frame encoder is not a power of 2)."""
+    t = min(s, target)
+    for d in range(t, 0, -1):
+        if s % d == 0:
+            return d
+    return 1
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                      softcap: Optional[float], q_chunk: int = 512,
+                      kv_chunk: int = 1024, q_offset: int = 0):
+    """softmax(QK^T/sqrt(d) [+mask]) V without materializing S×S.
+
+    q: [B, Sq, G, Hg, d]  (G = kv groups, Hg = heads per group)
+    k,v: [B, Sk, G, d]
+    returns [B, Sq, G, Hg, d] in q.dtype; accumulation in f32.
+    """
+    b, sq, g, hg, d = q.shape
+    sk = k.shape[1]
+    q_chunk = _divisor_near(sq, q_chunk)
+    kv_chunk = _divisor_near(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    scale = d ** -0.5
+    qs = (q * scale).reshape(b, nq, q_chunk, g, hg, d)
+    ks = k.reshape(b, nk, kv_chunk, g, d)
+    vs = v.reshape(b, nk, kv_chunk, g, d)
+
+    q_pos_base = jnp.arange(q_chunk) + q_offset
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def q_step(_, qi):
+        qc, qidx = qi  # [B, qc, G, Hg, d], scalar chunk index
+        q_pos = q_pos_base + qidx * q_chunk
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kidx = ki
+            k_pos = k_pos_base + kidx * kv_chunk
+            s = jnp.einsum("bqghd,bkgd->bghqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            s = _softcap(s, softcap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(mask, s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bghqk,bkgd->bghqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, hg, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, g, hg, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, g, hg, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B,G,Hg,qc,d]
+        return None, out.transpose(0, 3, 1, 2, 4)       # [B,qc,G,Hg,d]
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qs.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    # outs: [nq, B, qc, G, Hg, d]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, g, hg, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def attn_apply(params, cfg: ArchConfig, x, *, causal: bool = True,
+               window: Optional[int] = None, positions=None,
+               cache: Optional[KVCache] = None, cache_len=None,
+               kv_x=None, chunk_offset=None):
+    """Full attention block.
+
+    * training / prefill: x [B, S, D]; returns y [B, S, D] (+new cache if
+      `cache` given — prefill fills positions [0, S)).
+    * decode: x [B, 1, D], cache + cache_len given; returns (y, new_cache).
+    * chunked prefill: x [B, W, D] with `chunk_offset` (scalar) — writes
+      K/V at [offset, offset+W) and attends over the whole cache with the
+      causal mask anchored at the true positions (flash-chunked over the
+      cache, so peak memory is O(W × kv_chunk), independent of prompt
+      length — the engine-level fix for 32k-prompt prefill HBM blowups).
+    * cross-attention: kv_x [B, Sk, D] supplies keys/values (no cache, no
+      causal mask) — used by the whisper decoder over encoder output.
+    """
+    b, s, _ = x.shape
+    g = cfg.n_kv_heads
+    hg = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    hd = cfg.head_dim
+
+    if positions is None:
+        if chunk_offset is not None:
+            positions = chunk_offset + jnp.arange(s)[None, :]
+        else:
+            positions = jnp.arange(s)[None, :]
+
+    q = jnp.einsum("bsd,dq->bsq", x, params["wq"])
+    q = q.reshape(b, s, g, hg, hd)
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dk->bsk", src, params["wk"])
+    v = jnp.einsum("bsd,dk->bsk", src, params["wv"])
+    sk = src.shape[1]
+    k = k.reshape(b, sk, g, hd)
+    v = v.reshape(b, sk, g, hd)
+
+    if kv_x is None:  # self-attention: rotary on q and k
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k.reshape(b, sk, g, 1, hd), cos, sin).reshape(
+            b, sk, g, hd)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        # ---- decode: write one position per row, attend over the cache ----
+        # Per-row positions support continuous batching: each serving slot
+        # decodes at its own length (the PQ scheduler admits mid-stream).
+        idx = positions[:, 0].astype(jnp.int32)            # [B]
+        rows = jnp.arange(b)
+        ck = cache.k.at[rows, idx].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[rows, idx].set(v[:, 0].astype(cache.v.dtype))
+        new_cache = KVCache(ck, cv)
+        s_max = ck.shape[1]
+        scores = jnp.einsum("bqghd,bkgd->bghqk", q * hd ** -0.5, ck,
+                            preferred_element_type=jnp.float32)
+        scores = _softcap(scores, cfg.logit_softcap)
+        kpos = jnp.arange(s_max)
+        valid = kpos[None, :] <= idx[:, None]              # [B, S]
+        if window is not None:
+            valid &= kpos[None, :] > (idx[:, None] - window)
+        scores = jnp.where(valid[:, None, None, None, :], scores, _NEG)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bghqk,bkgd->bqghd", p.astype(cv.dtype), cv)
+    elif chunk_offset is not None and cache is not None:
+        # ---- chunked prefill: append W positions, attend over the cache --
+        off = jnp.asarray(chunk_offset, jnp.int32)
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, off, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, off, 0, 0))
+        new_cache = KVCache(ck, cv)
+        # causal masking vs true positions: cache slots beyond off+W have
+        # k_pos > q_pos and mask out automatically
+        out = chunked_attention(
+            q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True,
+            window=window, softcap=cfg.logit_softcap,
+            q_offset=off)
+    else:
+        if cache is not None:  # prefill: populate cache [0, S)
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+            new_cache = KVCache(ck, cv)
+        out = chunked_attention(
+            q, k, v, causal=causal and kv_x is None, window=window,
+            softcap=cfg.logit_softcap)
+
+    y = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, cfg.q_dim),
+                   params["wo"])
+    return y, new_cache

@@ -1,0 +1,141 @@
+"""Shared layers: norms, gated MLPs, embeddings, initializers.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency);
+layer stacks carry a leading layer axis and are consumed by ``lax.scan``
+(compact HLO regardless of depth — essential for the 94-layer dry-runs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch_config import ArchConfig
+
+
+def truncated_normal(key, shape, dtype, stddev: float):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    return truncated_normal(key, (d_in, d_out), dtype, d_in ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, dtype) -> jnp.ndarray:
+    return jnp.zeros((cfg.d_model,), dtype)  # rmsnorm "scale - 1" convention
+
+
+def apply_norm(scale, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    """RMSNorm (gemma convention: weight stored as scale-1) in f32."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        xf = xf * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, dtype, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi_up": dense_init(k2, cfg.d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, cfg.d_model, dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):   # plain 'gelu' has no gate matrix
+        p["wi_gate"] = dense_init(k1, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(params, x, act: str = "swiglu"):
+    up = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    if act == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        gate = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif act == "gelu":          # plain 2-matrix MLP (whisper)
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(f"unknown act {act}")
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ArchConfig, dtype) -> jnp.ndarray:
+    # N(0, d^-1/2): keeps tied logits O(1); archs with embed_scale
+    # (gemma) multiply activations back up by sqrt(d) at lookup time.
+    return truncated_normal(key, (cfg.vocab_padded, cfg.d_model), dtype,
+                            cfg.d_model ** -0.5)
+
+
+def embed_apply(embed, tokens, scale_by_dim: bool = True,
+                mode: str = "take"):
+    """Token embedding lookup.
+
+    mode="onehot": one-hot matmul against the (vocab-sharded) table —
+    contraction-only in both directions, so GSPMD partitions forward and
+    backward cleanly (a sharded-table gather either trips the partitioner
+    or replicates the embedding gradient; EXPERIMENTS.md §Perf).  ~2·T·V·D
+    extra FLOPs, <5% of a training step.  mode="take": plain gather (fine
+    single-device and for tied tables).
+    """
+    if mode == "onehot":
+        vids = jax.lax.broadcasted_iota(jnp.int32, (embed.shape[0],), 0)
+        onehot = (tokens[..., None] == vids).astype(embed.dtype)
+        x = jnp.einsum("...v,vd->...d", onehot, embed)
+    else:
+        x = jnp.take(embed, tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(embed.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def unembed_apply(cfg: ArchConfig, params, x):
+    """Logits over the padded vocab (tied or separate head)."""
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softmax_xent(logits, labels, vocab: int):
+    """Mean token cross-entropy; positions with label < 0 are masked.
+
+    Written to stay sharding-friendly when the vocab axis is partitioned:
+    the padded-tail mask is an iota comparison (elementwise) and the gold
+    logit is a one-hot contraction (reduction over the sharded axis →
+    psum), instead of `.at[].set` / `take_along_axis`, whose data-dependent
+    addressing makes GSPMD all-gather the full [B, S, V] logits
+    (4.98 GB/device on the qwen3 train cell — EXPERIMENTS.md §Perf).
+    """
+    vp = logits.shape[-1]
+    vids = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0)
+    if vp > vocab:
+        logits = jnp.where(vids >= vocab, -1e30, logits)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (vids == safe[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

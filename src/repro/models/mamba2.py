@@ -1,0 +1,200 @@
+"""Mamba2 (SSD — state space duality) block, chunked for TPU.
+
+Training/prefill uses the chunked SSD decomposition (Dao & Gu 2024): the
+sequence is split into chunks of length Q; within a chunk the contribution
+is a masked-decay quadratic form (attention-like, MXU-friendly [Q, Q]
+einsums), and across chunks a single recurrent state [H, N, P] is carried
+by a ``lax.scan`` — so HLO size is independent of sequence length and peak
+memory is O(Q²) not O(S²).
+
+Decode is the O(1) recurrence: ``S' = a·S + dt·(B ⊗ x); y = C·S' + D_skip·x``
+— this is why the hybrid/ssm architectures run the ``long_500k`` decode
+shape that full-attention models cannot.
+
+Scalar-A per head (Mamba2 convention), single B/C group, depthwise causal
+conv over (x, B, C) with kernel size ``conv_dim``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch_config import ArchConfig
+from repro.models.layers import dense_init, truncated_normal
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # [B, conv_dim - 1, di + 2N] rolling conv window
+    ssd: jnp.ndarray     # [B, H, N, P] recurrent state
+
+
+def mamba_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": dense_init(k1, d, 2 * di + 2 * n + h, dtype),
+        "conv_w": truncated_normal(k2, (cfg.conv_dim, conv_ch), dtype, 0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": dense_init(k3, di, d, dtype),
+        "norm_z": jnp.zeros((di,), dtype),  # gated RMSNorm scale
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> MambaCache:
+    di, n, h, p = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_head_dim)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.conv_dim - 1, di + 2 * n), dtype),
+        ssd=jnp.zeros((batch, h, n, p), jnp.float32))
+
+
+def _causal_conv(u, w, b, history=None):
+    """Depthwise causal conv1d. u: [B, S, C]; w: [K, C].
+
+    `history` [B, K-1, C] prepends past context (decode/prefill continuity).
+    Implemented as K shifted adds — no conv primitive needed, K is 4.
+    """
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([history, u], axis=1)
+    out = jnp.zeros_like(u)
+    s = u.shape[1]
+    for j in range(k):
+        out = out + full[:, j:j + s, :] * w[j]
+    return jax.nn.silu(out + b), full[:, -(k - 1):, :]
+
+
+def _split_proj(cfg: ArchConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _gated_norm(z, x, scale, eps: float = 1e-6):
+    """RMSNorm(x) * silu(z) — the Mamba2 output gate."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps) * (
+        1.0 + scale.astype(jnp.float32))
+    return (xf * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+
+
+def mamba_apply(params, cfg: ArchConfig, u, *, cache: MambaCache = None,
+                ) -> Tuple[jnp.ndarray, MambaCache]:
+    """Training/prefill path. u: [B, S, D] with S a multiple of ssm_chunk
+    (or smaller than it). Returns (y, final cache)."""
+    b, s, d = u.shape
+    di, n, h, p = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_head_dim)
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    proj = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    hist = cache.conv if cache is not None else None
+    xbc, conv_hist = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  hist)
+    xh = xbc[..., :di].reshape(b, s, h, p)
+    bb = xbc[..., di:di + n]                     # [B, S, N]
+    cc = xbc[..., di + n:]                       # [B, S, N]
+
+    a = -jnp.exp(params["a_log"])                               # [H]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                   # [B, S, H]
+    la = dt * a                                                  # log decay
+
+    # chunked SSD
+    xc = xh.reshape(b, nc, q, h, p)
+    bc = bb.reshape(b, nc, q, n).astype(jnp.float32)
+    cc_ = cc.reshape(b, nc, q, n).astype(jnp.float32)
+    lac = la.reshape(b, nc, q, h)
+    dtc = dt.reshape(b, nc, q, h)
+
+    cum = jnp.cumsum(lac, axis=2)                                # [B,nc,Q,H]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # li - lj
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask the *exponent* (not the result): where(tri, exp(seg), 0) has a
+    # NaN cotangent for masked entries (0 * inf) once seg overflows.
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+
+    # intra-chunk: Y[i] = sum_j C_i·B_j decay(i,j) dt_j x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", cc_, bc)                  # [B,nc,Q,Q]
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]            # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w,
+                         xc.astype(jnp.float32))
+
+    # chunk-boundary states and inter-chunk scan
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # decay to end
+    bx = jnp.einsum("bcjn,bcjhp->bcjhnp", bc,
+                    xc.astype(jnp.float32) * dtc[..., None])
+    s_chunk = jnp.einsum("bcjh,bcjhnp->bchnp", dec_end, bx)      # [B,nc,H,N,P]
+    a_chunk = jnp.exp(cum[:, :, -1, :])                          # [B,nc,H]
+
+    s0 = (cache.ssd if cache is not None
+          else jnp.zeros((b, h, n, p), jnp.float32))
+
+    def chunk_step(carry, inp):
+        s_prev = carry
+        sc, ac = inp                                 # [B,H,N,P], [B,H]
+        s_new = ac[:, :, None, None] * s_prev + sc
+        return s_new, s_prev
+
+    s_final, s_prevs = jax.lax.scan(
+        chunk_step, s0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)       # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc_,
+                         jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = _gated_norm(z, y.reshape(b, s, di).astype(u.dtype),
+                    params["norm_z"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    new_cache = MambaCache(conv=conv_hist.astype(
+        cache.conv.dtype if cache is not None else u.dtype), ssd=s_final)
+    return out, new_cache
+
+
+def mamba_decode(params, cfg: ArchConfig, u, cache: MambaCache
+                 ) -> Tuple[jnp.ndarray, MambaCache]:
+    """O(1) decode step. u: [B, 1, D]."""
+    b, _, d = u.shape
+    di, n, h, p = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_head_dim)
+    proj = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_hist = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  cache.conv)
+    xh = xbc[:, 0, :di].reshape(b, h, p)
+    bb = xbc[:, 0, di:di + n].astype(jnp.float32)
+    cc = xbc[:, 0, di + n:].astype(jnp.float32)
+
+    a = -jnp.exp(params["a_log"])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])       # [B, H]
+    decay = jnp.exp(dt * a)                          # [B, H]
+
+    bx = jnp.einsum("bn,bhp->bhnp", bb, xh.astype(jnp.float32)
+                    * dt[..., None])
+    s_new = decay[:, :, None, None] * cache.ssd + bx
+    y = jnp.einsum("bn,bhnp->bhp", cc, s_new)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = _gated_norm(z, y.reshape(b, 1, di).astype(u.dtype),
+                    params["norm_z"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, MambaCache(conv=conv_hist.astype(cache.conv.dtype),
+                           ssd=s_new)

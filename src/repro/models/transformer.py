@@ -1,0 +1,488 @@
+"""Model assembly: heterogeneous block stacks, training forward, prefill and
+decode, for every assigned architecture family.
+
+Key structural decisions (DESIGN.md §4):
+
+* **Pattern-group scan.** The stack is ``pattern_reps`` repetitions of
+  ``layer_pattern`` (e.g. gemma2 "LG", zamba2 "MMMMMA").  Parameters are
+  stacked with a leading reps axis and the stack is applied with one
+  ``lax.scan`` whose body applies the whole pattern group — the lowered HLO
+  is O(pattern) not O(n_layers), which keeps 94-layer × 512-device
+  dry-run compiles tractable.
+* **Shared attention ('A')** — zamba2-style: one attention weight set,
+  closed over by the scan body (not scanned), reused by every group.
+* **Decode caches** are pytrees stacked along the same reps axis and
+  scanned together with the parameters.
+* **Sharding** is annotated with logical axes (repro.dist.sharding); the
+  same code serves single-CPU smoke tests and the 512-chip dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import mamba2, moe, xlstm
+from repro.models.arch_config import ArchConfig
+from repro.models.attention import KVCache, attn_apply, attn_init, init_cache
+from repro.models.layers import (apply_mlp, apply_norm, embed_apply,
+                                 embed_init, mlp_init, norm_init,
+                                 softmax_xent, unembed_apply)
+
+ATTN_KINDS = ("G", "L", "A")
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _embed_mode(cfg: ArchConfig) -> str:
+    """One-hot matmul lookups for untied tables under a mesh (GSPMD-clean
+    in both directions); plain take elsewhere. See layers.embed_apply."""
+    from repro.dist.sharding import current_mesh
+    if not cfg.tie_embeddings and current_mesh() is not None:
+        return "onehot"
+    return "take"
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ArchConfig, kind: str, dtype) -> Dict[str, Any]:
+    """Parameters of one block of the given kind (un-stacked)."""
+    p: Dict[str, Any] = {"norm": norm_init(cfg, dtype)}
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("G", "L"):
+        p["attn"] = attn_init(k1, cfg, dtype)
+    if kind in ATTN_KINDS:  # attention kinds carry an FFN sub-block
+        p["norm2"] = norm_init(cfg, dtype)
+        if cfg.family == "moe":
+            p["moe"] = moe.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(k3, cfg, dtype)
+    elif kind == "M":
+        p["mamba"] = mamba2.mamba_init(k1, cfg, dtype)
+    elif kind == "X":
+        p["mlstm"] = xlstm.mlstm_init(k1, cfg, dtype)
+    elif kind == "S":
+        p["slstm"] = xlstm.slstm_init(k1, cfg, dtype)
+    return p
+
+
+def _stack_init(key, cfg: ArchConfig, pattern: str, reps: int, dtype):
+    """Stacked parameters: for each pattern position, [reps, ...] leaves."""
+    stack = {}
+    for i, kind in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), reps)
+        per = [_block_init(k, cfg, kind, dtype) for k in keys]
+        stack[f"p{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return stack
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    ke, ks, ka, kn, kx, ku = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ke, cfg, dtype),
+        "final_norm": norm_init(cfg, dtype),
+        "stack": _stack_init(ks, cfg, cfg.layer_pattern, cfg.pattern_reps,
+                             dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ku, cfg, dtype)
+    if "A" in cfg.layer_pattern:
+        params["shared_attn"] = attn_init(ka, cfg, dtype)
+    if cfg.enc_dec:
+        params["enc_stack"] = _stack_init(kn, cfg, "G", cfg.n_enc_layers,
+                                          dtype)
+        params["enc_final_norm"] = norm_init(cfg, dtype)
+        # cross-attention per decoder layer, stacked with the decoder reps
+        keys = jax.random.split(kx, cfg.pattern_reps)
+        per = [{"attn": attn_init(k, cfg, dtype),
+                "norm": norm_init(cfg, dtype)} for k in keys]
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(bp, cfg: ArchConfig, kind: str, x, *, shared_attn=None,
+                 mode: str = "train", cache=None, pos=None,
+                 window_override=None):
+    """One block: pre-norm core + residual (+ FFN sub-block for attention).
+
+    Returns (x, new_cache, aux_loss).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(bp["norm"], x, cfg.norm)
+    new_cache = cache
+
+    if kind in ATTN_KINDS:
+        ap = shared_attn if kind == "A" else bp["attn"]
+        window = cfg.window if kind == "L" else window_override
+        if mode == "decode":
+            y, new_cache = attn_apply(
+                ap, cfg, h, window=window, positions=pos[:, None],
+                cache=cache, cache_len=pos[0])
+        elif mode == "chunk":
+            y, new_cache = attn_apply(ap, cfg, h, window=window,
+                                      cache=cache, chunk_offset=pos)
+        else:
+            y, new_cache = attn_apply(ap, cfg, h, window=window, cache=cache)
+        x = x + shard(y, "batch")
+        h2 = apply_norm(bp["norm2"], x, cfg.norm)
+        if cfg.family == "moe":
+            y2, aux = moe.moe_apply(bp["moe"], cfg, h2)
+        else:
+            y2 = apply_mlp(bp["mlp"], h2, cfg.act)
+        x = x + shard(y2, "batch")
+    elif kind == "M":
+        if mode == "decode":
+            y, new_cache = mamba2.mamba_decode(bp["mamba"], cfg, h, cache)
+        else:
+            y, new_cache = mamba2.mamba_apply(bp["mamba"], cfg, h,
+                                              cache=cache)
+        x = x + shard(y, "batch")
+    elif kind == "X":
+        if mode == "decode":
+            y, new_cache = xlstm.mlstm_decode(bp["mlstm"], cfg, h, cache)
+        else:
+            y, new_cache = xlstm.mlstm_apply(bp["mlstm"], cfg, h)
+        x = x + shard(y, "batch")
+    elif kind == "S":
+        if mode == "decode":
+            y, new_cache = xlstm.slstm_decode(bp["slstm"], cfg, h, cache)
+        else:
+            y, new_cache = xlstm.slstm_apply(bp["slstm"], cfg, h,
+                                             cache=cache)
+        x = x + shard(y, "batch")
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return x, new_cache, aux
+
+
+def _enc_dec_layer(gp, cfg: ArchConfig, x, mode: str, cache, pos, enc_out,
+                   xkv):
+    """Whisper-style decoder layer: self-attn -> cross-attn -> MLP."""
+    bp = gp["p0"]
+    cp = gp["cross"]
+    h = apply_norm(bp["norm"], x, cfg.norm)
+    if mode == "decode":
+        y, nc = attn_apply(bp["attn"], cfg, h, positions=pos[:, None],
+                           cache=cache)
+    else:
+        y, nc = attn_apply(bp["attn"], cfg, h, cache=cache)
+    x = x + y
+
+    hc = apply_norm(cp["norm"], x, cfg.norm)
+    if mode == "decode":
+        yc, _ = _cross_decode(cp["attn"], cfg, hc, xkv)
+    else:
+        yc, _ = attn_apply(cp["attn"], cfg, hc, kv_x=enc_out, causal=False)
+    x = x + yc
+
+    h2 = apply_norm(bp["norm2"], x, cfg.norm)
+    x = x + apply_mlp(bp["mlp"], h2, cfg.act)
+    return x, nc
+
+
+def _group_body(cfg: ArchConfig, pattern: str, mode: str):
+    """Scan body applying one pattern group. xs = (group params, caches)."""
+
+    def body(carry, xs):
+        x, aux, pos, shared_attn, enc_out = carry
+        # barrier: without it XLA hoists the first f32 convert of x out of
+        # the backward while-loop, materializing the WHOLE saved-residual
+        # stack in f32 at once (12.6 GB on the 94-layer cell — §Perf)
+        x = jax.lax.optimization_barrier(x)
+        gp, caches = xs
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            c = None if caches is None else caches.get(f"p{i}")
+            if cfg.enc_dec:
+                xkv = None if caches is None else caches.get("xkv")
+                x, nc = _enc_dec_layer(gp, cfg, x, mode, c, pos, enc_out,
+                                       xkv)
+                new_caches[f"p{i}"] = nc
+            else:
+                x, nc, a = _apply_block(gp[f"p{i}"], cfg, kind, x,
+                                        shared_attn=shared_attn, mode=mode,
+                                        cache=c, pos=pos)
+                new_caches[f"p{i}"] = nc
+                aux = aux + a
+        if mode != "decode":
+            # sequence-parallel carry: the saved-for-backward residual
+            # stack shards over `model` along S (DESIGN.md; §Perf log)
+            from repro.dist.sharding import shard_activation_sp
+            x = shard_activation_sp(x)
+        return (x, aux, pos, shared_attn, enc_out), new_caches
+
+    return body
+
+
+def _cross_decode(ap, cfg: ArchConfig, h, cross_cache):
+    """Decode-time cross-attention against precomputed encoder K/V."""
+    b, s, _ = h.shape
+    g = cfg.n_kv_heads
+    hg = cfg.n_heads // max(g, 1)
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dq->bsq", h, ap["wq"]).reshape(b, s, g, hg, hd)
+    ck, cv = cross_cache
+    scores = jnp.einsum("bqghd,bkgd->bghqk", q * hd ** -0.5, ck,
+                        preferred_element_type=jnp.float32)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghqk,bkgd->bqghd", p.astype(cv.dtype), cv)
+    y = jnp.einsum("bsq,qd->bsd", out.reshape(b, s, cfg.q_dim), ap["wo"])
+    return y, None
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ArchConfig, params, frames):
+    """Bidirectional encoder over stub frame embeddings [B, Se, D]."""
+    x = frames.astype(_dtype(cfg))
+    x = x + _sinusoid(frames.shape[1], cfg.d_model, x.dtype)
+
+    def body(carry, gp):
+        x = carry
+        h = apply_norm(gp["p0"]["norm"], x, cfg.norm)
+        y, _ = attn_apply(gp["p0"]["attn"], cfg, h, causal=False)
+        x = x + y
+        h2 = apply_norm(gp["p0"]["norm2"], x, cfg.norm)
+        x = x + apply_mlp(gp["p0"]["mlp"], h2, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def _sinusoid(s: int, d: int, dtype):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)[None]
+
+
+# ---------------------------------------------------------------------------
+# training forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
+            enc_frames=None):
+    """Training/teacher-forcing forward. Returns (logits, aux_loss).
+
+    tokens [B, S]; prefix_embeds [B, Tp, D] (VLM stub frontend);
+    enc_frames [B, Se, D] (audio stub frontend, enc_dec only).
+    """
+    x = embed_apply(params["embed"], tokens, cfg.embed_scale,
+                    mode=_embed_mode(cfg))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch")
+
+    cross_x = None
+    if cfg.enc_dec:
+        assert enc_frames is not None, "enc_dec arch needs enc_frames"
+        cross_x = encode(cfg, params, enc_frames)
+
+    body = _group_body(cfg, cfg.layer_pattern, "train")
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    shared = params.get("shared_attn")
+    stack = dict(params["stack"])
+    if cfg.enc_dec:
+        stack["cross"] = params["cross"]
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux, _, _, _), _ = jax.lax.scan(
+        body, (x, aux0, None, shared, cross_x),
+        (stack, None))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed_apply(cfg, params, x)
+    return shard(logits, "batch", None, "vocab"), aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, dict]:
+    logits, aux = forward(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:   # vlm prefix: loss on text only
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0],
+                       logits.shape[1] - labels.shape[1]), -1,
+                      labels.dtype), labels], axis=1)
+    xent = softmax_xent(logits, labels, cfg.vocab)
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode state / prefill / decode step
+# ---------------------------------------------------------------------------
+
+def init_decode_caches(cfg: ArchConfig, batch: int, s_max: int):
+    """Cache pytree stacked [reps, ...] per pattern position."""
+    dtype = _dtype(cfg)
+
+    def one(kind: str):
+        if kind in ATTN_KINDS:
+            return init_cache(cfg, batch, s_max, dtype)
+        if kind == "M":
+            return mamba2.init_mamba_cache(cfg, batch, dtype)
+        if kind == "X":
+            return xlstm.init_mlstm_cache(cfg, batch)
+        if kind == "S":
+            return xlstm.init_slstm_cache(cfg, batch)
+        raise ValueError(kind)
+
+    caches = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        c = one(kind)
+        caches[f"p{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (cfg.pattern_reps,) + x.shape).copy(), c)
+    return caches
+
+
+def _shard_caches(caches):
+    """Identity: cache layouts are owned by the jit boundary
+    (repro.launch.serve.cache_shardings).  An activation-style constraint
+    here conflicts with the (data, seq-model) cache specs and forces a
+    whole-cache reshard copy per prefill — 24.7 GB of pure waste on the
+    gemma2 prefill cell, and it breaks in→out donation aliasing
+    (EXPERIMENTS.md §Perf)."""
+    return caches
+
+
+def prefill(cfg: ArchConfig, params, tokens, caches, *, enc_frames=None,
+            prefix_embeds=None):
+    """Populate caches for positions [0, S); returns (last_logits, caches).
+
+    For attention blocks this writes K/V for the whole prompt; for SSM /
+    xLSTM blocks it runs the chunked parallel form and stores the final
+    recurrent state.
+    """
+    x = embed_apply(params["embed"], tokens, cfg.embed_scale,
+                    mode=_embed_mode(cfg))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch")
+
+    enc_out, xkv = None, None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, enc_frames)
+        enc_out, xkv = _precompute_cross(cfg, params, enc_out)
+
+    body = _group_body(cfg, cfg.layer_pattern, "prefill")
+    shared = params.get("shared_attn")
+    stack = dict(params["stack"])
+    if cfg.enc_dec:
+        stack["cross"] = params["cross"]
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, _, _, _, _), new_caches = jax.lax.scan(
+        body, (x, aux0, None, shared, enc_out),
+        (stack, caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed_apply(cfg, params, x[:, -1:, :])
+    new_caches = _shard_caches(new_caches)
+    if cfg.enc_dec:
+        new_caches["xkv"] = xkv           # [R, B, Se, g, hd] pair
+    return logits, new_caches
+
+
+def prefill_chunked(cfg: ArchConfig, params, tokens, caches, *,
+                    chunk_len: int = 2048):
+    """Chunked prefill: scan over prompt chunks, appending to the caches.
+
+    Peak activation memory is O(chunk_len), independent of the prompt
+    length — a 32k×32 prompt batch prefills within HBM where the one-shot
+    path needs >50 GB/device (EXPERIMENTS.md §Roofline notes).  Requires
+    cache-continuable blocks: attention (any), Mamba2 and sLSTM carry
+    state across chunks; mLSTM ('X') does not yet.
+
+    Returns (last-token logits [B, 1, V], caches).
+    """
+    if "X" in cfg.layer_pattern or cfg.enc_dec:
+        raise NotImplementedError(
+            f"{cfg.name}: chunked prefill needs cache-continuable blocks")
+    b, s = tokens.shape
+    assert s % chunk_len == 0, (s, chunk_len)
+    n_chunks = s // chunk_len
+    chunks = tokens.reshape(b, n_chunks, chunk_len).transpose(1, 0, 2)
+
+    body = _group_body(cfg, cfg.layer_pattern, "chunk")
+    shared = params.get("shared_attn")
+    stack = dict(params["stack"])
+
+    def chunk_step(carry, xs):
+        caches, _ = carry
+        toks, ci = xs
+        x = embed_apply(params["embed"], toks, cfg.embed_scale,
+                        mode=_embed_mode(cfg))
+        x = shard(x, "batch")
+        off = ci * chunk_len
+        aux0 = jnp.zeros((), jnp.float32)
+        (x, _, _, _, _), new_caches = jax.lax.scan(
+            body, (x, aux0, off, shared, None), (stack, caches))
+        return (new_caches, x), None
+
+    (caches, last_x), _ = jax.lax.scan(
+        chunk_step, (caches, jnp.zeros(
+            (b, chunk_len, cfg.d_model), _dtype(cfg))),
+        (chunks, jnp.arange(n_chunks)))
+    x = apply_norm(params["final_norm"], last_x, cfg.norm)
+    logits = unembed_apply(cfg, params, x[:, -1:, :])
+    return logits, _shard_caches(caches)
+
+
+def _precompute_cross(cfg: ArchConfig, params, enc_out):
+    """Per-decoder-layer cross K/V from encoder output: [R, B, Se, g, hd]."""
+    def per_layer(cp):
+        b, se, _ = enc_out.shape
+        k = jnp.einsum("bsd,dk->bsk", enc_out, cp["attn"]["wk"]).reshape(
+            b, se, cfg.n_kv_heads, cfg.head_dim)
+        v = jnp.einsum("bsd,dk->bsk", enc_out, cp["attn"]["wv"]).reshape(
+            b, se, cfg.n_kv_heads, cfg.head_dim)
+        return (k, v)
+    return enc_out, jax.vmap(per_layer)(params["cross"])
+
+
+def decode_step(cfg: ArchConfig, params, token, caches, pos):
+    """One decode step. token [B, 1] int32; pos [B] per-row positions.
+
+    Returns (logits [B, 1, V], new caches).  For enc_dec archs the caches
+    dict carries "xkv" (precomputed cross K/V from prefill), which is
+    threaded through unchanged.
+    """
+    x = embed_apply(params["embed"], token, cfg.embed_scale,
+                    mode=_embed_mode(cfg))
+    x = shard(x, "batch")
+    body = _group_body(cfg, cfg.layer_pattern, "decode")
+    shared = params.get("shared_attn")
+    stack = dict(params["stack"])
+    if cfg.enc_dec:
+        stack["cross"] = params["cross"]
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, _, _, _, _), new_caches = jax.lax.scan(
+        body, (x, aux0, pos, shared, None),
+        (stack, caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed_apply(cfg, params, x)
+    if cfg.enc_dec:
+        new_caches["xkv"] = caches["xkv"]
+    return logits, new_caches

@@ -1,0 +1,253 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-form) and sLSTM (scalar
+memory, true recurrence), per Beck et al. 2024 (arXiv:2405.04517).
+
+* **mLSTM** trains with a flash-style chunked parallel form: the gate
+  matrix D̃[i,j] = F_i − F_j + I_j decomposes into a row term and a column
+  term, so the same running-max chunk recurrence as flash attention applies
+  — with the twist that the exponential weights *multiply* the raw qkᵀ
+  scores (which may be negative) and the normalizer is
+  max(|row-sum|, exp(−m)) instead of a softmax denominator.
+  Decode is the O(1) matrix-memory recurrence C' = f·C + i·v kᵀ.
+
+* **sLSTM** has genuine recurrent weight connections (R·h_{t−1} feeds the
+  gates), so training scans sequentially over time — a real architectural
+  cost we keep faithful (HLO stays compact via ``lax.scan``).  Exponential
+  gating is stabilized with the running max-state m.
+
+Both give O(1)-state decode, which is why xlstm-350m runs the ``long_500k``
+shape that quadratic attention cannot.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.arch_config import ArchConfig
+from repro.models.layers import dense_init, truncated_normal
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMCache(NamedTuple):
+    c: jnp.ndarray   # [B, H, P, P] matrix memory
+    n: jnp.ndarray   # [B, H, P] normalizer
+    m: jnp.ndarray   # [B, H] stabilizer
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    kq, kk, kv, kg, ko = jax.random.split(key, 5)
+    h = cfg.n_heads
+    return {
+        "wq": dense_init(kq, d, d, dtype),
+        "wk": dense_init(kk, d, d, dtype),
+        "wv": dense_init(kv, d, d, dtype),
+        "w_if": truncated_normal(kg, (d, 2 * h), jnp.float32, d ** -0.5),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+                                ).astype(jnp.float32),
+        "wo": dense_init(ko, d, d, dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> MLSTMCache:
+    h, p = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, p, p), jnp.float32),
+        n=jnp.zeros((batch, h, p), jnp.float32),
+        m=jnp.full((batch, h), 0.0, jnp.float32))
+
+
+def mlstm_apply(params, cfg: ArchConfig, x, *, chunk: int = 256
+                ) -> Tuple[jnp.ndarray, MLSTMCache]:
+    """Parallel (training/prefill) path. x: [B, S, D], S % chunk == 0."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    qh = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, p)
+    kh = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, h, p)
+    vh = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, h, p)
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                       params["w_if"]) + params["b_if"]
+    li = gates[..., :h]                                   # log input gate
+    lf = jax.nn.log_sigmoid(gates[..., h:])               # log forget gate
+
+    f_cum = jnp.cumsum(lf, axis=1)                        # [B, S, H]
+    row = f_cum                                           # F_i
+    col = li - f_cum                                      # I_j - F_j
+
+    qc = (qh * p ** -0.5).reshape(b, nc, q, h, p)
+    kc = kh.reshape(b, nc, q, h, p)
+    vc = vh.reshape(b, nc, q, h, p)
+    rowc = row.reshape(b, nc, q, h)
+    colc = col.reshape(b, nc, q, h)
+
+    pos = jnp.arange(q)
+
+    def q_step(_, qi):
+        qx, rw, qidx = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kx, vx, cl, kidx = ki
+            score = jnp.einsum("bqhp,bkhp->bhqk", qx, kx,
+                               preferred_element_type=jnp.float32)
+            bias = rw.transpose(0, 2, 1)[:, :, :, None] \
+                + cl.transpose(0, 2, 1)[:, :, None, :]    # [B,H,q,k]
+            causal = (pos[:, None] + qidx * q) >= (pos[None, :] + kidx * q)
+            bias = jnp.where(causal[None, None], bias, -jnp.inf)
+            m_new = jnp.maximum(m, bias.max(axis=-1))
+            w = score * jnp.exp(bias - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + w.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhp->bhqp", w.astype(vx.dtype), vx,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q), jnp.float32)
+        a0 = jnp.zeros((b, h, q, p), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             colc.transpose(1, 0, 2, 3), jnp.arange(nc)))
+        denom = jnp.maximum(jnp.abs(l), jnp.exp(-m))
+        out = acc / denom[..., None]
+        return None, out.transpose(0, 2, 1, 3)            # [B,q,H,p]
+
+    _, outs = jax.lax.scan(
+        q_step, None,
+        (qc.transpose(1, 0, 2, 3, 4), rowc.transpose(1, 0, 2, 3),
+         jnp.arange(nc)))
+    y = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, d).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, params["wo"])
+
+    # final recurrent state (for prefill -> decode handoff)
+    m_fin = f_cum[:, -1, :][:, :, None] \
+        - f_cum.transpose(0, 2, 1) + li.transpose(0, 2, 1)   # [B,H,S]
+    m_last = m_fin.max(axis=-1)
+    w_fin = jnp.exp(m_fin - m_last[..., None])
+    c_fin = jnp.einsum("bhs,bshp,bshq->bhpq", w_fin,
+                       kh.astype(jnp.float32), vh.astype(jnp.float32))
+    n_fin = jnp.einsum("bhs,bshp->bhp", w_fin, kh.astype(jnp.float32))
+    return y, MLSTMCache(c=c_fin, n=n_fin, m=m_last)
+
+
+def mlstm_decode(params, cfg: ArchConfig, x, cache: MLSTMCache
+                 ) -> Tuple[jnp.ndarray, MLSTMCache]:
+    """O(1) decode. x: [B, 1, D]."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    qh = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, h, p)
+    kh = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, h, p)
+    vh = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, h, p)
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                       params["w_if"])[:, 0] + params["b_if"]
+    li, lf = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+
+    m_new = jnp.maximum(lf + cache.m, li)
+    f_eff = jnp.exp(lf + cache.m - m_new)[..., None]
+    i_eff = jnp.exp(li - m_new)[..., None]
+    kf = kh.astype(jnp.float32)
+    vf = vh.astype(jnp.float32)
+    c_new = f_eff[..., None] * cache.c \
+        + i_eff[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = f_eff * cache.n + i_eff * kf
+    qf = qh.astype(jnp.float32) * p ** -0.5
+    num = jnp.einsum("bhp,bhpq->bhq", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, d).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, params["wo"])
+    return y, MLSTMCache(c=c_new, n=n_new, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray   # [B, D]
+    n: jnp.ndarray   # [B, D]
+    h: jnp.ndarray   # [B, D]
+    m: jnp.ndarray   # [B, D]
+
+
+def slstm_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    kx, kr = jax.random.split(key)
+    return {
+        # z, i, f, o gates from input ...
+        "w_x": dense_init(kx, d, 4 * d, dtype),
+        # ... and block-diagonal recurrent connections per head
+        "r_h": truncated_normal(kr, (h, p, 4 * p), jnp.float32, p ** -0.5),
+        "bias": jnp.zeros((4 * d,), jnp.float32)
+                  .at[2 * d:3 * d].set(3.0),   # forget-gate bias
+    }
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> SLSTMCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z, m=z)
+
+
+def _slstm_cell(params, cfg: ArchConfig, xt, cache: SLSTMCache):
+    """One sLSTM step. xt: [B, 4*D] pre-projected gate inputs (f32)."""
+    b = xt.shape[0]
+    d = xt.shape[1] // 4
+    h = cfg.n_heads
+    p = d // h
+    hh = cache.h.reshape(b, h, p)
+    rec = jnp.einsum("bhp,hpq->bhq", hh, params["r_h"]).reshape(b, 4 * d)
+    g = xt + rec + params["bias"]
+    z = jnp.tanh(g[:, :d])
+    li = g[:, d:2 * d]                       # log-space input gate
+    lf = jax.nn.log_sigmoid(g[:, 2 * d:3 * d])
+    o = jax.nn.sigmoid(g[:, 3 * d:])
+
+    m_new = jnp.maximum(lf + cache.m, li)
+    i_eff = jnp.exp(li - m_new)
+    f_eff = jnp.exp(lf + cache.m - m_new)
+    c_new = f_eff * cache.c + i_eff * z
+    n_new = f_eff * cache.n + i_eff
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_apply(params, cfg: ArchConfig, x, *, cache: SLSTMCache = None
+                ) -> Tuple[jnp.ndarray, SLSTMCache]:
+    """Sequential scan over time (sLSTM is a true RNN). x: [B, S, D]."""
+    b, s, d = x.shape
+    if cache is None:
+        cache = init_slstm_cache(cfg, b)
+    xg = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                    params["w_x"].astype(jnp.float32))
+
+    def step(carry, xt):
+        new = _slstm_cell(params, cfg, xt, carry)
+        return new, new.h
+
+    final, hs = jax.lax.scan(step, cache, xg.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)       # [B, S, D]
+    return y, final
+
+
+def slstm_decode(params, cfg: ArchConfig, x, cache: SLSTMCache
+                 ) -> Tuple[jnp.ndarray, SLSTMCache]:
+    xg = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                    params["w_x"].astype(jnp.float32))[:, 0]
+    new = _slstm_cell(params, cfg, xg, cache)
+    return new.h[:, None, :].astype(x.dtype), new

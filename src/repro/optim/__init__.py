@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compress import (CompressState, compress_init,
+                                  compressed_psum)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "CompressState", "compress_init", "compressed_psum"]

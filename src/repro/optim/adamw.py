@@ -1,0 +1,61 @@
+"""AdamW with f32 moments over (possibly) bf16 parameters.
+
+The moments are the dominant optimizer memory (2 × params × 4B); the
+launcher shards them ZeRO-1 style over the ``data`` axis (see
+``repro.launch.train.zero1_spec``) so a 235B-parameter MoE fits a v5e pod:
+bf16 params are replicated across data (1.8 GB/chip at 256 chips) while
+the f32 moments divide by the data-parallel degree as well.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics). All math in f32."""
+    step = state.step + 1
+
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(gf)) + 1e-20)
+    scale = jnp.minimum(1.0, clip_norm / gnorm)
+    gf = jax.tree.map(lambda g: g * scale, gf)
+
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state.nu, gf)
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step, mu, nu), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,132 @@
+"""8-bit AdamW: blockwise-quantized moments (Dettmers-style).
+
+The f32 Adam moments dominate optimizer memory (8 bytes/param).  Blockwise
+int8 quantization with per-block f32 absmax scales stores them at
+~1.03 bytes/param: the 235B-MoE cell's optimizer args drop from 7.3 GB to
+1.9 GB per chip (dry-run evidence in EXPERIMENTS.md §Perf).
+
+Quantization is per block of 256 along the last axis (scales keep the
+leading axes, so they shard exactly like the parameter).  Moments are
+dequantized, updated with the standard AdamW math in f32, and requantized
+each step; no error feedback is needed at this block size (the relative
+quantization error of absmax-int8 is < 0.8%, well under the gradient
+noise floor — Dettmers et al. 2022).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class AdamW8State(NamedTuple):
+    step: jnp.ndarray
+    q_mu: dict       # int8, param-shaped
+    s_mu: dict       # f32 scales, shape[:-1] + (blocks,)
+    q_nu: dict
+    s_nu: dict
+
+
+def _nblocks(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK
+
+
+def _blocked(x):
+    n = x.shape[-1]
+    nb = _nblocks(n)
+    pad = nb * BLOCK - n
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return xp.reshape(x.shape[:-1] + (nb, BLOCK)), n
+
+
+def _unblocked(xb, n):
+    return xb.reshape(xb.shape[:-2] + (-1,))[..., :n]
+
+
+def _quantize(x):
+    """Linear signed absmax quantization (first moment).
+
+    x: [..., n] f32 -> (q int8 [..., n], scales f32 [..., nb])."""
+    xb, n = _blocked(x)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    return _unblocked(q, n).astype(jnp.int8), scale
+
+
+def _dequantize(q, scale):
+    xb, n = _blocked(q.astype(jnp.float32))
+    return _unblocked(xb * scale[..., None], n)
+
+
+def _quantize_nu(x):
+    """4th-root (dynamic) quantization for the nonnegative second moment.
+
+    Linear absmax int8 cannot represent nu's dynamic range: elements with
+    nu ≪ block-max round to zero and mhat/(sqrt(0)+eps) explodes (observed
+    directly in tests).  Mapping q = 255·(nu/max)^(1/4) concentrates
+    resolution near zero — relative error at nu/max = 1e-5 is ~7%, versus
+    quantize-to-zero for linear int8."""
+    xb, n = _blocked(x)
+    scale = jnp.maximum(jnp.max(xb, axis=-1), 1e-20)
+    ratio = jnp.clip(xb / scale[..., None], 0.0, 1.0)
+    q = jnp.round(255.0 * jnp.sqrt(jnp.sqrt(ratio)))
+    return _unblocked(q, n).astype(jnp.uint8), scale
+
+
+def _dequantize_nu(q, scale):
+    xb, n = _blocked(q.astype(jnp.float32))
+    r = xb / 255.0
+    return _unblocked(jnp.square(jnp.square(r)) * scale[..., None], n)
+
+
+def adamw8_init(params) -> AdamW8State:
+    def qz(p, dtype):
+        return jnp.zeros(p.shape, dtype)
+
+    def sz(p):
+        return jnp.zeros(p.shape[:-1] + (_nblocks(p.shape[-1]),),
+                         jnp.float32)
+
+    return AdamW8State(
+        step=jnp.zeros((), jnp.int32),
+        q_mu=jax.tree.map(lambda p: qz(p, jnp.int8), params),
+        s_mu=jax.tree.map(sz, params),
+        q_nu=jax.tree.map(lambda p: qz(p, jnp.uint8), params),
+        s_nu=jax.tree.map(sz, params))
+
+
+def adamw8_update(params, grads, state: AdamW8State, *, lr,
+                  b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                  weight_decay: float = 0.1, clip_norm: float = 1.0):
+    step = state.step + 1
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(gf)) + 1e-20)
+    scale = jnp.minimum(1.0, clip_norm / gnorm)
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, q_mu, s_mu, q_nu, s_nu):
+        g = g * scale
+        mu = b1 * _dequantize(q_mu, s_mu) + (1 - b1) * g
+        nu = b2 * _dequantize_nu(q_nu, s_nu) + (1 - b2) * jnp.square(g)
+        u = (mu / b1c) / (jnp.sqrt(nu / b2c) + eps) \
+            + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        nq_mu, ns_mu = _quantize(mu)
+        nq_nu, ns_nu = _quantize_nu(nu)
+        return new_p, nq_mu, ns_mu, nq_nu, ns_nu
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat = [upd(p, g, qm, sm, qn, sn) for p, g, qm, sm, qn, sn in zip(
+        flat_p, jax.tree.leaves(gf), jax.tree.leaves(state.q_mu),
+        jax.tree.leaves(state.s_mu), jax.tree.leaves(state.q_nu),
+        jax.tree.leaves(state.s_nu))]
+    unf = lambda i: jax.tree.unflatten(tree, [f[i] for f in flat])  # noqa
+    new_params = unf(0)
+    new_state = AdamW8State(step, unf(1), unf(2), unf(3), unf(4))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

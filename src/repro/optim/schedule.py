@@ -1,0 +1,15 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    """Linear warmup then cosine decay to floor * peak."""
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(s < warmup, warm, cos)

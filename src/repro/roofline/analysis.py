@@ -1,0 +1,122 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``cost_analysis()`` supplies FLOPs and bytes of the (per-device, SPMD)
+program.  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op (post-partitioning shapes, i.e. true per-device payloads).  Ops inside
+while-loop bodies (scans over layers / microbatches) are multiplied by the
+trip count parsed from the loop condition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g. "  %x.5 = (f32[8,128], f32[8,128]) all-reduce(...)"
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*("
+    + "|".join(_COLLECTIVES) + r")[(\.]")
+_TRIP_RE = re.compile(r"trip_count=\"?(\d+)")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-op result bytes by collective kind, weighting ops inside
+    while bodies by their trip counts (best effort: scans carry a
+    known_trip_count attribute in optimized HLO)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    # map computation name -> trip count for while loops
+    trip: Dict[str, int] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*{", line)
+        header = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+        if header and "{" in line:
+            current = header.group(1)
+        mtrip = _TRIP_RE.search(line)
+        if mtrip and "while(" in line:
+            # body name appears as body=%name
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            if mb:
+                trip[mb.group(1)] = int(mtrip.group(1))
+
+    current = None
+    for line in hlo_text.splitlines():
+        header = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+        if header and "{" in line:
+            current = header.group(1)
+        m = _OP_RE.search(line)
+        if m:
+            mult = trip.get(current, 1)
+            out[m.group(2)] += shape_bytes(m.group(1)) * mult
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    dominant: str
+
+    @staticmethod
+    def from_measurements(flops_per_dev: float, bytes_per_dev: float,
+                          coll_bytes_per_dev: float,
+                          link_bw: float = hw.ICI_BW) -> "Roofline":
+        c = flops_per_dev / hw.PEAK_FLOPS
+        m = bytes_per_dev / hw.HBM_BW
+        n = coll_bytes_per_dev / link_bw
+        dom = max((("compute", c), ("memory", m), ("collective", n)),
+                  key=lambda kv: kv[1])[0]
+        return Roofline(c, m, n, flops_per_dev, bytes_per_dev,
+                        coll_bytes_per_dev, dom)
+
+    def bound_step_time(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def mfu(self, model_flops_per_dev: float) -> float:
+        """MODEL_FLOPS utilization against the bound step time."""
+        t = self.bound_step_time()
+        if t <= 0:
+            return 0.0
+        return model_flops_per_dev / (t * hw.PEAK_FLOPS)
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) for training; forward-only
+    passes (prefill, decode) count 2·N·D per processed token."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

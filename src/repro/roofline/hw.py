@@ -1,0 +1,15 @@
+"""Hardware constants for the roofline model (TPU v5e target).
+
+Terms (EXPERIMENTS.md §Roofline):
+    compute    = HLO_FLOPs   / (PEAK_FLOPS)           [per chip]
+    memory     = HLO_bytes   / (HBM_BW)               [per chip]
+    collective = coll_bytes  / (ICI_BW)               [per chip]
+"""
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (~aggregate per-chip estimate)
+DCN_BW = 25e9              # cross-pod (pod axis) — conservative estimate
+
+CHIPS_PER_POD = 256
+HBM_BYTES = 16 * 2 ** 30   # v5e HBM capacity per chip

@@ -1,0 +1,91 @@
+"""Render the roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir artifacts/dryrun]
+        [--mesh 16x16] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load_rows(d: Path, mesh: str):
+    rows = []
+    for p in sorted(d.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        arch, shape = r["arch"], r["shape"]
+        if r.get("status") == "SKIP":
+            rows.append({"arch": arch, "shape": shape, "skip": True,
+                         "reason": r.get("reason", "")})
+            continue
+        if r.get("status") != "OK":
+            rows.append({"arch": arch, "shape": shape, "skip": True,
+                         "reason": r.get("status", "?")})
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        rows.append({
+            "arch": arch, "shape": shape, "skip": False,
+            "compute": rl["compute_s"], "memory": rl["memory_s"],
+            "coll": rl["collective_s"], "dom": rl["dominant"],
+            "bound": rl["bound_step_s"],
+            "useful": rl["useful_flops_ratio"],
+            "mfu": rl["mfu_bound"],
+            "hbm_gb": m["per_device_total"] / 1e9,
+            "fits": m["fits_hbm"],
+            "compile_s": r["timing"]["compile_s"],
+        })
+    return rows
+
+
+def render(rows, markdown: bool = True) -> str:
+    out = []
+    if markdown:
+        out.append("| arch | shape | compute | memory | collective | "
+                   "dominant | bound | useful-FLOPs | MFU-bound | HBM/dev |"
+                   " fits |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["skip"]:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP "
+                       f"| — | — | — | — | — |" if markdown else
+                       f"{r['arch']},{r['shape']},SKIP")
+            continue
+        if markdown:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute'])} | "
+                f"{_fmt_s(r['memory'])} | {_fmt_s(r['coll'])} | "
+                f"**{r['dom']}** | {_fmt_s(r['bound'])} | "
+                f"{r['useful']:.2f} | {r['mfu']:.4f} | "
+                f"{r['hbm_gb']:.1f}GB | "
+                f"{'yes' if r['fits'] else 'NO'} |")
+        else:
+            out.append(f"{r['arch']},{r['shape']},{r['dom']},"
+                       f"{r['bound']:.4f},{r['mfu']:.5f}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(Path(args.dir), args.mesh)
+    print(render(rows, markdown=not args.csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.serving.scheduler import PQScheduler, Request
+from repro.serving.engine import ServeEngine
+
+__all__ = ["PQScheduler", "Request", "ServeEngine"]

@@ -1,0 +1,14 @@
+"""Test configuration.
+
+IMPORTANT: do NOT set --xla_force_host_platform_device_count here — smoke
+tests and benches must see 1 device (the dry-run sets 512 itself, in a
+subprocess).  Multi-device tests spawn subprocesses with their own flags.
+"""
+
+import hypothesis
+
+hypothesis.settings.register_profile(
+    "repro", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                           hypothesis.HealthCheck.data_too_large])
+hypothesis.settings.load_profile("repro")

@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch instantiates a REDUCED same-family config and runs one
+forward/train step on CPU, asserting output shapes and no NaNs; plus a
+prefill + two decode steps through the cache machinery.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, reduced_config
+from repro.models import transformer as tf
+
+
+def _batch(cfg, B, S, seed=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.frontend == "vit":
+        batch["prefix_embeds"] = jnp.full(
+            (B, cfg.frontend_tokens, cfg.d_model), 0.01, jnp.bfloat16)
+    if cfg.frontend == "audio":
+        batch["enc_frames"] = jnp.full((B, cfg.enc_seq, cfg.d_model), 0.01,
+                                       jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_grad(arch):
+    cfg = reduced_config(arch)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64
+    batch = _batch(cfg, B, S)
+
+    logits, aux = tf.forward(cfg, params, batch["tokens"],
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             enc_frames=batch.get("enc_frames"))
+    prefix = cfg.frontend_tokens if cfg.frontend == "vit" else 0
+    assert logits.shape == (B, S + prefix, cfg.vocab_padded)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    loss, metrics = tf.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: tf.loss_fn(cfg, p, batch)[0])(params)
+    gnorm = float(jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads))))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode(arch):
+    cfg = reduced_config(arch)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    prefix = cfg.frontend_tokens if cfg.frontend == "vit" else 0
+    caches = tf.init_decode_caches(cfg, B, S + prefix + 8)
+    logits, caches = tf.prefill(cfg, params, batch["tokens"], caches,
+                                enc_frames=batch.get("enc_frames"),
+                                prefix_embeds=batch.get("prefix_embeds"))
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    pos = jnp.full((B,), S + prefix, jnp.int32)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab], -1)[:, None].astype(
+        jnp.int32)
+    for step in range(2):
+        logits, caches = tf.decode_step(cfg, params, tok, caches,
+                                        pos + step)
+        assert logits.shape == (B, 1, cfg.vocab_padded)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab], -1)[:, None].astype(
+            jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_exact_constants(arch):
+    """Guard the assigned constants (the FULL configs are only lowered via
+    the dry-run; here we check they match the assignment table)."""
+    cfg = get_config(arch)
+    expected = {
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected, (arch, got, expected)
+    assert cfg.vocab_padded % 256 == 0
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm_state == 64
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.n_experts, cfg.top_k) == (128, 8)
+    if arch == "moonshot-v1-16b-a3b":
+        assert (cfg.n_experts, cfg.top_k) == (64, 6)
+    if arch == "gemma2-27b":
+        assert cfg.logit_softcap == 50.0 and cfg.final_softcap == 30.0
+        assert cfg.layer_pattern == "LG" and cfg.window == 4096
+    if arch == "gemma-2b":
+        assert cfg.head_dim == 256 and cfg.n_kv_heads == 1  # MQA
+    if arch == "whisper-tiny":
+        assert cfg.enc_dec and cfg.n_enc_layers == 4 and cfg.enc_seq == 1500
+
+
+def test_param_counts_in_family_range():
+    """Full-config parameter counts should land near the named sizes."""
+    bounds = {
+        "internvl2-26b": (15e9, 30e9),       # LM backbone of the 26B VLM
+        "zamba2-2.7b": (2.0e9, 3.5e9),
+        "gemma-2b": (2.0e9, 3.3e9),
+        "mistral-nemo-12b": (10e9, 15e9),
+        "gemma2-27b": (22e9, 32e9),
+        "phi4-mini-3.8b": (3.0e9, 4.8e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        # the assignment's constants (48L x 64e x 3*2048*1408) imply ~28B
+        # total; the "16b" in the name reflects Moonlight's shared-expert/
+        # dense-layer layout we deliberately simplified (DESIGN.md §5)
+        "moonshot-v1-16b-a3b": (13e9, 30e9),
+        # assignment sets d_ff=0 (bare sLSTM/mLSTM cells, no projection
+        # blocks), which lands below the 350M nameplate of the full
+        # xLSTM[1:1] stack (DESIGN.md §5)
+        "xlstm-350m": (0.1e9, 0.55e9),
+        "whisper-tiny": (0.025e9, 0.08e9),
+    }
+    for arch, (lo, hi) in bounds.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]B"
+
+
+def test_chunked_prefill_matches_one_shot():
+    """prefill_chunked == prefill to float tolerance (the HBM-bounded
+    prefill path for 32k prompts — EXPERIMENTS.md §Roofline notes)."""
+    import dataclasses
+    for arch in ("gemma-2b", "zamba2-2.7b"):
+        cfg = dataclasses.replace(reduced_config(arch), dtype="float32")
+        if "M" in cfg.layer_pattern:
+            cfg = dataclasses.replace(cfg, ssm_chunk=16)
+        params = tf.init_params(cfg, jax.random.PRNGKey(0))
+        B, S, W = 2, 64, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                  cfg.vocab)
+        c1 = tf.init_decode_caches(cfg, B, S)
+        l1, c1 = tf.prefill(cfg, params, toks, c1)
+        c2 = tf.init_decode_caches(cfg, B, S)
+        l2, c2 = tf.prefill_chunked(cfg, params, toks, c2, chunk_len=W)
+        rel = float(jnp.max(jnp.abs(l1 - l2))) / (
+            float(jnp.max(jnp.abs(l1))) + 1e-9)
+        assert rel < 2e-3, (arch, rel)
+        # caches agree too (same K/V written at the same positions)
+        for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-2, atol=1e-4)

@@ -1,0 +1,175 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracles,
+swept across shapes and dtypes, plus the pallas-backed tick equivalence.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.bitonic import bitonic_sort_kvf
+from repro.kernels.merge_consume import merge_sorted_kvf
+from repro.kernels.radix_select import radix_select_threshold
+
+
+# ---------------------------------------------------------------------------
+# bitonic co-sort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n", [(1, 8), (4, 64), (2, 256), (1, 1024)])
+@pytest.mark.parametrize("key_dist", ["uniform", "dups", "inf_pad",
+                                      "negative"])
+def test_bitonic_shapes(rows, n, key_dist):
+    rng = np.random.default_rng(hash((rows, n, key_dist)) % 2 ** 31)
+    k = rng.uniform(-50, 50, (rows, n)).astype(np.float32)
+    if key_dist == "dups":
+        k[:, : n // 2] = 7.0
+    if key_dist == "inf_pad":
+        k[rng.random((rows, n)) < 0.3] = np.inf
+    if key_dist == "negative":
+        k = -np.abs(k)
+    v = rng.integers(0, 1 << 20, (rows, n)).astype(np.int32)
+    f = rng.integers(0, 2, (rows, n)).astype(np.int32)
+    ok, ov, of = bitonic_sort_kvf(jnp.asarray(k), jnp.asarray(v),
+                                  jnp.asarray(f))
+    rk, rv, rf = ref.ref_sort_kvf(jnp.asarray(k), jnp.asarray(v),
+                                  jnp.asarray(f))
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(rk))
+    for r in range(rows):  # payload multiset per row (network unstable)
+        assert sorted(zip(k[r], v[r])) == sorted(
+            zip(np.asarray(ok)[r], np.asarray(ov)[r]))
+
+
+def test_bitonic_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        bitonic_sort_kvf(jnp.zeros((1, 12)), jnp.zeros((1, 12), jnp.int32),
+                         jnp.zeros((1, 12), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# rank-merge via one-hot MXU scatter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,tile", [(256, 256, 256), (768, 256, 128),
+                                      (96, 32, 32), (1024, 512, 256)])
+def test_merge_shapes(n, m, tile):
+    rng = np.random.default_rng(n * 1000 + m)
+    na, nb = rng.integers(0, n + 1), rng.integers(0, m + 1)
+    a = np.full(n, np.inf, np.float32)
+    b = np.full(m, np.inf, np.float32)
+    a[:na] = np.sort(rng.uniform(-10, 50, na)).astype(np.float32)
+    b[:nb] = np.sort(rng.uniform(-10, 50, nb)).astype(np.float32)
+    if na > 4 and nb > 4:  # cross-stream duplicates
+        b[:3] = a[:3]
+        b = np.sort(b)
+    av = rng.integers(0, 1 << 20, n).astype(np.int32)
+    bv = rng.integers(0, 1 << 20, m).astype(np.int32)
+    af = np.zeros(n, np.int32)
+    bf = np.ones(m, np.int32)
+    got = merge_sorted_kvf(*map(jnp.asarray, (a, av, af, b, bv, bf)),
+                           tile=tile)
+    exp = ref.ref_merge_sorted(*map(jnp.asarray, (a, av, af, b, bv, bf)))
+    for g, e in zip(got, exp):
+        np.testing.assert_array_equal(
+            np.nan_to_num(np.asarray(g, np.float64), posinf=1e300),
+            np.nan_to_num(np.asarray(e, np.float64), posinf=1e300))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10)
+def test_merge_property(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 128, 64
+    na, nb = rng.integers(0, n + 1), rng.integers(0, m + 1)
+    a = np.full(n, np.inf, np.float32)
+    b = np.full(m, np.inf, np.float32)
+    a[:na] = np.sort(rng.integers(0, 30, na)).astype(np.float32)  # dups
+    b[:nb] = np.sort(rng.integers(0, 30, nb)).astype(np.float32)
+    av = np.arange(n, dtype=np.int32)
+    bv = np.arange(m, dtype=np.int32) + 1000
+    z = np.zeros_like(av)[:n]
+    got_k, got_v, _ = merge_sorted_kvf(
+        jnp.asarray(a), jnp.asarray(av), jnp.asarray(z),
+        jnp.asarray(b), jnp.asarray(bv), jnp.asarray(np.zeros(m, np.int32)),
+        tile=64)
+    # merged keys sorted; payload multiset conserved
+    gk = np.asarray(got_k)
+    fin = gk[np.isfinite(gk)]
+    assert np.all(np.diff(fin) >= 0)
+    assert sorted(np.asarray(got_v).tolist()) == sorted(
+        av.tolist() + bv.tolist())
+
+
+# ---------------------------------------------------------------------------
+# radix threshold select
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [32, 256, 4096])
+def test_radix_threshold(length):
+    rng = np.random.default_rng(length)
+    for trial in range(3):
+        nfin = int(rng.integers(1, length + 1))
+        keys = np.full(length, np.inf, np.float32)
+        keys[:nfin] = rng.uniform(-100, 100, nfin).astype(np.float32)
+        if nfin > 8:
+            keys[2:6] = keys[1]   # duplicates around the threshold
+        rng.shuffle(keys)
+        for k in [0, 1, nfin // 2, nfin]:
+            tau, nb = radix_select_threshold(jnp.asarray(keys), k)
+            rtau, rnb = ref.ref_select_threshold(jnp.asarray(keys), k)
+            assert float(tau) == float(rtau), (length, k)
+            assert int(nb) == int(rnb), (length, k)
+
+
+def test_select_k_smallest_composite():
+    """radix select + compaction + bitonic == oracle k-smallest."""
+    rng = np.random.default_rng(0)
+    length, k_max = 512, 64
+    keys = rng.uniform(0, 1000, length).astype(np.float32)
+    vals = np.arange(length, dtype=np.int32)
+    for k in [0, 1, 17, 64]:
+        gk, gv = ops.select_k_smallest(jnp.asarray(keys), jnp.asarray(vals),
+                                       k, k_max, backend="pallas")
+        ek, ev = ref.ref_select_k(jnp.asarray(keys), jnp.asarray(vals), k,
+                                  k_max)
+        np.testing.assert_array_equal(
+            np.nan_to_num(np.asarray(gk), posinf=1e30),
+            np.nan_to_num(np.asarray(ek), posinf=1e30))
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(ev))
+
+
+# ---------------------------------------------------------------------------
+# pallas-backed tick == jnp tick (the integrated hot path)
+# ---------------------------------------------------------------------------
+
+def test_tick_pallas_backend_matches_oracle():
+    import dataclasses
+    from repro.core import EMPTY_VAL, PQConfig, RefPQ, init, tick
+    cfg = PQConfig(a_max=32, r_max=32, seq_cap=224, n_buckets=8,
+                   bucket_cap=32, detach_min=4, detach_max=64,
+                   detach_init=8, backend="pallas")
+    state = init(cfg)
+    ref_pq = RefPQ()
+    rng = np.random.default_rng(7)
+    nv = 0
+    for t in range(25):
+        n_add = int(rng.integers(0, cfg.a_max + 1))
+        n_add = min(n_add, cfg.par_cap - len(ref_pq))
+        n_rm = int(rng.integers(0, cfg.r_max + 1))
+        keys = rng.uniform(0, 500, n_add).astype(np.float32)
+        ak = np.full((cfg.a_max,), np.inf, np.float32)
+        av = np.full((cfg.a_max,), EMPTY_VAL, np.int32)
+        mask = np.zeros((cfg.a_max,), bool)
+        ak[:n_add] = keys
+        av[:n_add] = np.arange(nv, nv + n_add)
+        mask[:n_add] = True
+        nv += n_add
+        state, res = tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
+                          jnp.asarray(mask), jnp.asarray(n_rm))
+        got = np.sort(np.asarray(res.rm_keys)[np.asarray(res.rm_served)])
+        exp = np.sort(np.array(
+            [k for k, _ in ref_pq.tick(keys.tolist(), range(n_add), n_rm)
+             if k != np.inf], np.float32))
+        np.testing.assert_allclose(got, exp)

@@ -1,0 +1,54 @@
+"""Multi-device integration (8 fake devices in a subprocess — device count
+locks at first jax init, so these cannot share the main pytest process)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_SCRIPT = Path(__file__).parent / "multidev_checks.py"
+_ROOT = Path(__file__).parent.parent
+
+
+def _run(which: str, timeout: int = 900):
+    env = {**os.environ,
+           "PYTHONPATH": str(_ROOT / "src"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    proc = subprocess.run([sys.executable, str(_SCRIPT), which],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env, cwd=str(_ROOT))
+    assert proc.returncode == 0, (
+        f"{which} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_pq_8dev():
+    out = _run("pq")
+    assert "OK distributed_pq" in out
+
+
+@pytest.mark.slow
+def test_distributed_pq_v2_sharded_parallel_part():
+    out = _run("pqv2")
+    assert "OK distributed_pq_v2" in out
+
+
+@pytest.mark.slow
+def test_moe_expert_parallel_parity():
+    out = _run("moe")
+    assert "OK moe_parity" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_executes():
+    out = _run("train")
+    assert "OK sharded_train_step" in out
+
+
+@pytest.mark.slow
+def test_sharded_decode_executes():
+    out = _run("decode")
+    assert "OK sharded_decode" in out

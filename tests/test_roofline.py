@@ -1,0 +1,80 @@
+"""HLO static analyzer: trip-count recovery, dot FLOPs, collective bytes —
+validated against a small program with known counts."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.analysis import Roofline, model_flops
+from repro.roofline.hlo_stats import analyze, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]") == 128
+    assert shape_bytes("bf16[2,3]{1,0}") == 12
+    assert shape_bytes("(f32[2], s32[4])") == 24
+    assert shape_bytes("pred[]") == 1
+    assert shape_bytes("u32[10]") == 40
+
+
+def test_scan_flops_counted_with_trips():
+    """A matmul inside a 7-iteration scan must count 7x."""
+    n = 128
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.dot(c, w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32))
+    hlo = lowered.compile().as_text()
+    st = analyze(hlo)
+    expected = 7 * 2 * n ** 3
+    assert st.flops == pytest.approx(expected, rel=0.01), (
+        st.flops, expected, st.trip_counts)
+
+
+def test_nested_scan_flops():
+    n = 64
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.dot(ci, w), None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32))
+    st = analyze(lowered.compile().as_text())
+    expected = 15 * 2 * n ** 3
+    assert st.flops == pytest.approx(expected, rel=0.01), st.trip_counts
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline.from_measurements(197e12, 10e9, 1e9)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.dominant == "compute"
+    r2 = Roofline.from_measurements(1e12, 819e9 * 2, 1e9)
+    assert r2.dominant == "memory"
+    assert r2.bound_step_time() == pytest.approx(2.0)
+    r3 = Roofline.from_measurements(1e12, 1e9, 50e9 * 3)
+    assert r3.dominant == "collective"
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.configs import get_config
+    dense = get_config("gemma-2b")
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert model_flops(dense, "train", 1000) == pytest.approx(
+        6.0 * dense.param_count() * 1000)
+    assert moe.active_param_count() < 0.2 * moe.param_count()
+    assert model_flops(moe, "train", 1000) == pytest.approx(
+        6.0 * moe.active_param_count() * 1000)

@@ -1,0 +1,54 @@
+"""End-to-end behaviour: train -> checkpoint -> restore -> serve, with the
+paper's priority queue scheduling the serving side."""
+
+import dataclasses
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import reduced_config
+from repro.data import SyntheticLM
+from repro.launch.train import TrainConfig, init_train_state, make_train_step
+from repro.serving import Request, ServeEngine
+
+
+def test_train_checkpoint_serve_roundtrip():
+    cfg = dataclasses.replace(reduced_config("gemma-2b"), n_layers=2,
+                              vocab=128)
+    tcfg = TrainConfig(n_micro=1, peak_lr=1e-3, warmup=2, total_steps=20,
+                       fsdp=False, zero1=False)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=32, batch=4, seed=0)
+
+    # --- train a few steps ---
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg, None))
+    for t in range(6):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+    # --- checkpoint + restore ---
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(6, state.params)
+        restored, got_step = mgr.restore(state.params)
+        assert got_step == 6
+
+    # --- serve with the PQ scheduler ---
+    eng = ServeEngine(cfg, restored, n_slots=2, s_max=48)
+    eng.submit([Request(rid=0, priority=1.0, max_new=3),
+                Request(rid=1, priority=2.0, max_new=3),
+                Request(rid=2, priority=0.5, max_new=3)])
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        eng.step(lambda r: rng.integers(0, cfg.vocab, 4).astype(np.int32))
+        if len(eng.completed) == 3:
+            break
+    assert len(eng.completed) == 3
+    # elimination/combining actually happened in the scheduler
+    s = eng.sched.stats()
+    assert s["n_ticks"] > 0
+    assert s["rm_seq"] + s["add_imm_elim"] + s["add_upc_elim"] > 0

@@ -1,0 +1,110 @@
+"""Training-loop integration: loss decreases, grad-accum equivalence,
+optimizers agree, schedules behave."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced_config
+from repro.data import SyntheticLM
+from repro.launch.train import TrainConfig, init_train_state, make_train_step
+from repro.models import transformer as tf
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw8 import adamw8_init, adamw8_update
+
+
+def _tiny_cfg(dtype="float32"):
+    cfg = reduced_config("gemma-2b")
+    return dataclasses.replace(cfg, n_layers=2, vocab=256, dtype=dtype)
+
+
+def test_loss_decreases():
+    cfg = _tiny_cfg()
+    tcfg = TrainConfig(n_micro=2, peak_lr=3e-3, warmup=5, total_steps=60,
+                       fsdp=False, zero1=False)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, batch=8, seed=0)
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg, None))
+    losses = []
+    for t in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert np.isfinite(last)
+    assert last < first - 0.3, (first, last)
+
+
+def test_grad_accum_equivalence():
+    """n_micro=1 vs n_micro=4 must give (nearly) identical updates."""
+    cfg = _tiny_cfg("float32")
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=32, batch=8, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    out = {}
+    for n in (1, 4):
+        tcfg = TrainConfig(n_micro=n, fsdp=False, zero1=False)
+        state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg, None))
+        new_state, m = step(state, batch)
+        out[n] = (new_state.params, float(m["loss"]))
+    l1, l4 = out[1][1], out[4][1]
+    assert abs(l1 - l4) < 1e-4 * max(1.0, abs(l1))
+    for a, b in zip(jax.tree.leaves(out[1][0]), jax.tree.leaves(out[4][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_adamw8_tracks_adamw():
+    """8-bit moments track exact AdamW closely over a few steps."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(0, 0.1, (64, 512)), jnp.float32),
+              "b": jnp.asarray(rng.normal(0, 0.1, (512,)), jnp.float32)}
+    s32 = adamw_init(params)
+    s8 = adamw8_init(params)
+    p32, p8 = params, params
+    for t in range(5):
+        grads = jax.tree.map(
+            lambda p: jnp.asarray(rng.normal(0, 0.01, p.shape),
+                                  jnp.float32), params)
+        p32, s32, _ = adamw_update(p32, grads, s32, lr=1e-3)
+        p8, s8, _ = adamw8_update(p8, grads, s8, lr=1e-3)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p8)):
+        err = float(jnp.max(jnp.abs(a - b)))
+        scale = float(jnp.max(jnp.abs(a)) + 1e-9)
+        assert err / scale < 0.05, err / scale
+
+
+def test_cosine_schedule_shape():
+    import jax.numpy as jnp
+    warm = cosine_schedule(jnp.asarray(5), peak_lr=1e-3, warmup=10,
+                           total=100)
+    peak = cosine_schedule(jnp.asarray(10), peak_lr=1e-3, warmup=10,
+                           total=100)
+    end = cosine_schedule(jnp.asarray(100), peak_lr=1e-3, warmup=10,
+                          total=100, floor=0.1)
+    assert float(warm) < float(peak)
+    assert abs(float(peak) - 1e-3) < 1e-6
+    assert abs(float(end) - 1e-4) < 1e-6
+
+
+def test_moe_arch_trains():
+    cfg = dataclasses.replace(reduced_config("qwen3-moe-235b-a22b"),
+                              vocab=256, dtype="float32")
+    tcfg = TrainConfig(n_micro=1, peak_lr=5e-3, warmup=3, total_steps=40,
+                       fsdp=False, zero1=False)
+    # single fixed batch: the assertion is that the MoE stack can fit it
+    # (routing + experts + aux loss all receive gradients)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=32, batch=4, seed=3)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg, None))
+    losses = []
+    for t in range(30):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
