@@ -24,14 +24,15 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.dist.sharding import make_mesh
+
 
 def main() -> None:
     from repro.core import distributed as dpq
     from repro.core.config import PQConfig
 
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((ndev,), ("data",))
     cfg = PQConfig(a_max=32, r_max=32, seq_cap=4096, n_buckets=64,
                    bucket_cap=256, detach_min=8, detach_max=4096,
                    detach_init=256)

@@ -21,10 +21,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FCPQ, ParallelPQ, PQConfig, init, tick
+from repro.core import sharded as shq
 from repro.core.config import EMPTY_VAL
 
 WARM_ELEMENTS = 2000     # paper: "inserting 2000 elements ... stable state"
 KEY_HI = 100_000.0
+
+#: lane count for the "sharded" impl when the caller does not pick one
+DEFAULT_LANES = 4
 
 
 def make_cfg(width: int) -> PQConfig:
@@ -40,7 +44,17 @@ IMPLS = {
     "pqe": (init, tick),
     "fcskiplist": (FCPQ.init, FCPQ.tick),
     "lfskiplist": (ParallelPQ.init, ParallelPQ.tick),
+    "sharded": (shq.init, shq.tick),
 }
+
+
+def make_impl_cfg(impl: str, width: int, *, lanes: int = DEFAULT_LANES):
+    """Per-impl config: the sharded queue wraps the width-`width` base
+    config into `lanes` vmapped lanes (MultiQueues axis)."""
+    base = make_cfg(width)
+    if impl == "sharded":
+        return shq.make_sharded_cfg(width, lanes, base=base)
+    return base
 
 
 def _warm(cfg, impl_init, impl_tick, rng):
@@ -59,7 +73,8 @@ def _warm(cfg, impl_init, impl_tick, rng):
 
 
 def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
-              seed: int = 0, key_dist: str = "uniform") -> Dict[str, float]:
+              seed: int = 0, key_dist: str = "uniform",
+              lanes: int = DEFAULT_LANES) -> Dict[str, float]:
     """Throughput of one implementation at one width and add-fraction.
 
     key_dist:
@@ -69,9 +84,12 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
         cluster just above the current minimum, the paper's motivating
         scheduler workload, where elimination thrives.
 
+    `lanes` only affects impl="sharded" (relaxed semantics: its removes
+    are near-minimal, not exact — see repro.core.sharded).
+
     Returns {us_per_tick, mops_per_s, ...stats}.
     """
-    cfg = make_cfg(width)
+    cfg = make_impl_cfg(impl, width, lanes=lanes)
     impl_init, impl_tick = IMPLS[impl]
     rng = np.random.default_rng(seed)
     state = _warm(cfg, impl_init, impl_tick, rng)

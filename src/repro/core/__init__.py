@@ -6,6 +6,9 @@ Public API:
     RefPQ                               — sequential specification (oracle)
     eliminate_batch                     — standalone elimination pass
     make_distributed_tick               — shard_map distributed queue
+    sharded (module)                    — L-lane vmapped relaxed queue
+                                          (MultiQueues-style, c-relaxed
+                                          removes; repro.core.sharded)
 """
 
 from repro.core.config import EMPTY_VAL, PQConfig, PRODUCTION, SMALL

@@ -27,29 +27,14 @@ import jax.numpy as jnp
 from repro.core.config import EMPTY_VAL, PQConfig
 from repro.core.pqueue import (INF, ParPart, TickResult, _redistribute,
                                _sort_kv, _take_window, flatten_parallel,
-                               scatter_parallel)
+                               rank_merge_kv, scatter_parallel)
 
 _I32 = jnp.int32
 _F32 = jnp.float32
 
-
-def merge_sorted(ak, av, bk, bv):
-    """Rank-merge two sorted (key, val) streams (INF-padded).
-
-    out[i + rank_of_a_i_in_b] = a[i]; ties resolve a-first.  O(n+m) scatter
-    instead of an O((n+m) log) full sort — the same trick the Pallas
-    merge kernel uses (one-hot matmul there, native scatter here).
-    """
-    n, m = ak.shape[0], bk.shape[0]
-    pa = jnp.arange(n, dtype=_I32) + jnp.searchsorted(bk, ak,
-                                                      side="left").astype(_I32)
-    pb = jnp.arange(m, dtype=_I32) + jnp.searchsorted(ak, bk,
-                                                      side="right").astype(_I32)
-    ok = jnp.full((n + m,), INF, _F32)
-    ov = jnp.full((n + m,), EMPTY_VAL, _I32)
-    ok = ok.at[pa].set(ak).at[pb].set(bk)
-    ov = ov.at[pa].set(av).at[pb].set(bv)
-    return ok, ov
+# Rank-merge of two sorted INF-padded streams (ties a-first) — now shared
+# with the pqe tick's own sortless hot paths.
+merge_sorted = rank_merge_kv
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,17 @@ class PQConfig:
         return self.n_buckets * self.bucket_cap
 
     @property
+    def move_k_max(self) -> int:
+        """Static output width of the moveHead selection (ops.select_k_bucketed).
+
+        The extraction size is min(max(detach_n, r2), par_count), so it is
+        bounded by min(par_cap, max(r_max, detach_max)); rounded up to a
+        power of two for the pallas bitonic pass over the survivors.
+        """
+        bound = min(self.par_cap, max(self.r_max, self.detach_max))
+        return 1 << (bound - 1).bit_length()
+
+    @property
     def total_cap(self) -> int:
         return self.par_cap + self.seq_cap
 

@@ -45,6 +45,15 @@ from repro.core.elimination import eliminate_batch
 from repro.core.pqueue import INF, PQState, TickResult
 
 _I32 = jnp.int32
+
+
+def _axis_size(axis: str):
+    """Mapped-axis size as a static int; jax.lax.axis_size only exists on
+    newer jax.  psum of a Python literal folds to a concrete int because
+    mapped-axis sizes are static."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
 _F32 = jnp.float32
 
 
@@ -59,7 +68,7 @@ def local_tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
     delegated over the interconnect — used by the benchmarks to quantify
     elimination's collective-byte savings).
     """
-    ndev = jax.lax.axis_size(axis)
+    ndev = _axis_size(axis)
     my = jax.lax.axis_index(axis)
     rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), cfg.r_max)
 
@@ -142,12 +151,11 @@ def make_distributed_tick(cfg: PQConfig, mesh, axis: str = "data",
         return local_tick(cfg, state, add_keys, add_vals, add_mask,
                           rm_count[0], axis, eliminate=eliminate)
 
-    from jax import shard_map
+    from repro.dist.sharding import shard_map
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(axis)),
-        check_vma=False)
+        out_specs=(P(), P(axis)))
     return gcfg, jax.jit(mapped)
 
 
@@ -195,7 +203,7 @@ def local_tick_v2(cfg: PQConfig, state: DistState, add_keys, add_vals,
     gather already made all adds visible everywhere, so ownership is a
     mask, not a route), and moveHead gathers per-device candidate prefixes
     instead of whole structures."""
-    ndev = jax.lax.axis_size(axis)
+    ndev = _axis_size(axis)
     my = jax.lax.axis_index(axis)
     rep = state.rep
     par = jax.tree.map(lambda x: x[0], state.par)  # drop shard_map lead dim
@@ -324,13 +332,12 @@ def make_distributed_tick_v2(cfg: PQConfig, mesh, axis: str = "data"):
         return local_tick_v2(cfg, state, add_keys, add_vals, add_mask,
                              rm_count[0], axis)
 
-    from jax import shard_map
+    from repro.dist.sharding import shard_map
     par_spec = pqueue.ParPart(*(P(axis),) * 6)
     state_spec = DistState(rep=jax.tree.map(lambda _: P(), pqueue.init(
         gcfg)), par=par_spec)
     mapped = shard_map(
         body, mesh=mesh,
         in_specs=(state_spec, P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(state_spec, P(axis)),
-        check_vma=False)
+        out_specs=(state_spec, P(axis)))
     return gcfg, jax.jit(mapped)

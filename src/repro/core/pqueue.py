@@ -17,6 +17,13 @@ DESIGN.md §2–3 for the full mapping; in brief:
   (halve over N=1000, double under M=100, bounds [8, 65536]) transfer
   verbatim.
 
+The hot paths are *sortless* (DESIGN.md §6): bucket ranges are disjoint
+and ordered, so moveHead is a selection (``ops.extract_k_bucketed``) and
+every merge of already-sorted streams is a rank merge
+(:func:`rank_merge_kv` / the Pallas one-hot kernel) — the only
+comparison sorts left are the a_max-wide add-batch sort and BCAP-wide
+per-bucket row sorts.
+
 Correctness contract (checked against a heapq oracle in
 ``tests/test_pq_properties.py``): a tick with adds ``X`` and ``r`` removes
 returns exactly the ``r`` smallest keys of ``PQ ∪ X`` (as a multiset), and
@@ -33,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import EMPTY_VAL, PQConfig
+from repro.kernels import ops as kops
 
 INF = jnp.inf
 _I32 = jnp.int32
@@ -129,11 +137,6 @@ def _sort_kv(keys, vals):
     return keys[order], vals[order]
 
 
-def _sort_kvf(keys, vals, flags):
-    order = jnp.argsort(keys)
-    return keys[order], vals[order], flags[order]
-
-
 def _shift_left(arr, n, fill):
     """arr shifted left by (traced) n, filled with `fill` on the right."""
     size = arr.shape[0]
@@ -148,6 +151,21 @@ def _take_window(arr, start, out_len, fill):
     idx = jnp.arange(out_len) + start
     out = arr[jnp.clip(idx, 0, size - 1)]
     return jnp.where(idx < size, out, fill)
+
+
+def rank_merge_kv(ak, av, bk, bv):
+    """Rank-merge two sorted (key, val) streams (INF-padded).
+
+    Co-rank gather: a[i] lands at output rank i + #{b < a[i]} (ties
+    a-first), so for each output position j the source is recovered with
+    one searchsorted against those ranks — all gathers, no scatter (XLA
+    CPU serializes scatters; gathers vectorize), and no O((n+m) log(n+m))
+    full sort.  One implementation, shared with the kernel wrapper's jnp
+    backend; the flags lane is dead here and DCE'd under jit.
+    """
+    ok, ov, _ = kops._merge_sorted_corank(
+        ak, av, jnp.zeros_like(av), bk, bv, jnp.zeros_like(bv))
+    return ok, ov
 
 
 # ---------------------------------------------------------------------------
@@ -169,12 +187,18 @@ def _par_of(state: PQState) -> ParPart:
 
 
 def flatten_parallel(cfg: PQConfig, par: ParPart):
-    """All parallel items as a sorted flat (keys, vals) pair of size par_cap."""
-    slot = jnp.arange(cfg.bucket_cap)[None, :]
-    valid = slot < par.bcounts[:, None]
-    fk = jnp.where(valid, par.buckets, INF).reshape(-1)
-    fv = jnp.where(valid, par.bvals, EMPTY_VAL).reshape(-1)
-    return _sort_kv(fk, fv)
+    """All parallel items as a sorted flat (keys, vals) pair of size par_cap.
+
+    Sortless: bucket key ranges are disjoint and ordered (the splitter
+    directory routes every insert), so the global order is just the
+    per-bucket sorted runs concatenated by bucket rank — one shared
+    gather-only implementation in ops.sorted_runs_gather (O(L log BCAP)
+    row sorts instead of the old O(L log L) global sort).  DESIGN.md §6.
+    (The -1 padding of the shared helper IS this module's EMPTY_VAL.)
+    """
+    fk, fv, _, _ = kops.sorted_runs_gather(par.buckets, par.bvals,
+                                           par.bcounts, cfg.par_cap)
+    return fk, fv
 
 
 def _redistribute(cfg: PQConfig, flat_k, flat_v, total):
@@ -191,14 +215,16 @@ def _redistribute(cfg: PQConfig, flat_k, flat_v, total):
     kept = jnp.minimum(total, capacity)
     dropped = total - kept
 
-    r = jnp.arange(size, dtype=_I32)
-    b = jnp.clip(r // per, 0, nb - 1)
-    s = r % per
-    ok = r < kept
-    s = jnp.where(ok, s, bc)  # out-of-range slot => dropped by mode="drop"
-
-    buckets = jnp.full((nb, bc), INF, _F32).at[b, s].set(flat_k, mode="drop")
-    bvals = jnp.full((nb, bc), EMPTY_VAL, _I32).at[b, s].set(flat_v, mode="drop")
+    # bucket i takes the stream window [i*per, (i+1)*per) — a pure gather
+    # (XLA CPU serializes scatters; this also runs vmapped in the sharded
+    # queue where lax.cond lowers to select and every branch executes)
+    rows = jnp.arange(nb, dtype=_I32)[:, None]
+    slot = jnp.arange(bc, dtype=_I32)[None, :]
+    idx = rows * per + slot
+    take = (slot < per) & (idx < kept)
+    src = jnp.clip(idx, 0, size - 1)
+    buckets = jnp.where(take, flat_k[src], INF)
+    bvals = jnp.where(take, flat_v[src], EMPTY_VAL)
     bcounts = jnp.clip(kept - jnp.arange(nb, dtype=_I32) * per, 0, per)
 
     sp_idx = jnp.arange(nb, dtype=_I32) * per
@@ -211,15 +237,22 @@ def _redistribute(cfg: PQConfig, flat_k, flat_v, total):
                    kept.astype(_I32)), dropped.astype(_I32)
 
 
-def scatter_parallel(cfg: PQConfig, par: ParPart, keys, vals):
+def scatter_parallel(cfg: PQConfig, par: ParPart, keys, vals, *,
+                     assume_sorted: bool = False):
     """SL::addPar(): disjoint-access parallel insert of a key batch.
 
     Fast path: route each key through the splitter directory
     (the skiplist's top level) and segment-append within its bucket.
     On (rare) bucket overflow, fall back to a full rebalance — the batch
-    analogue of skiplist restructuring.
+    analogue of skiplist restructuring — built from a rank-merge of the
+    per-bucket sorted runs with the (sorted) incoming batch; no global
+    sort on either path.
 
-    Invalid entries are INF keys; they are dropped.
+    Invalid entries are INF keys; they are dropped.  `assume_sorted=True`
+    (the tick's path: its batch is a rank-merge of two sorted streams)
+    skips the grouping sort entirely: sorted keys route to nondecreasing
+    bucket ids, so segment ranks fall out of a searchsorted against the
+    batch itself.
     Returns (new_par, n_rebalance, n_dropped).
     """
     nb, bc = cfg.n_buckets, cfg.bucket_cap
@@ -229,38 +262,53 @@ def scatter_parallel(cfg: PQConfig, par: ParPart, keys, vals):
     bidx = jnp.clip(
         jnp.searchsorted(par.splitters, keys, side="right") - 1, 0, nb - 1
     ).astype(_I32)
-    bidx = jnp.where(valid, bidx, nb - 1)
+    bidx = jnp.where(valid, bidx, nb)        # invalid -> past the last bucket
 
-    # stable sort by bucket id to compute within-bucket append ranks
-    order = jnp.argsort(jnp.where(valid, bidx, nb), stable=True)
-    sb = bidx[order]
-    sk = keys[order]
-    sv = vals[order]
-    svalid = valid[order]
-    first = jnp.searchsorted(sb, sb, side="left")
-    rank = jnp.arange(size, dtype=_I32) - first.astype(_I32)
-    slot = par.bcounts[sb] + rank
+    if assume_sorted:
+        # keys ascending (INF suffix) => bidx already nondecreasing
+        sb, sk, sv = bidx, keys, vals
+    else:
+        # stable sort by bucket id so each bucket's arrivals are one
+        # contiguous segment of the batch
+        order = jnp.argsort(bidx, stable=True)
+        sb = bidx[order]
+        sk = keys[order]
+        sv = vals[order]
+    # per-bucket arrival segments of the (sorted-by-bucket) batch; the
+    # append is then a gather of each segment behind the row's live
+    # prefix — no scatter (XLA CPU serializes scatters)
+    rows = jnp.arange(nb, dtype=_I32)
+    seg_start = jnp.searchsorted(sb, rows, side="left").astype(_I32)
+    seg_len = (jnp.searchsorted(sb, rows, side="right").astype(_I32)
+               - seg_start)
+    new_counts = par.bcounts + seg_len
 
-    overflow = jnp.any(svalid & (slot >= bc))
+    overflow = jnp.any(new_counts > bc)
 
     def fast(par):
-        tslot = jnp.where(svalid, slot, bc)  # OOB => dropped
-        buckets = par.buckets.at[sb, tslot].set(sk, mode="drop")
-        bvals = par.bvals.at[sb, tslot].set(sv, mode="drop")
-        bcounts = par.bcounts + jnp.zeros((nb,), _I32).at[sb].add(
-            svalid.astype(_I32))
-        kmin = jnp.min(jnp.where(svalid, sk, INF))
+        slot = jnp.arange(bc, dtype=_I32)[None, :]
+        old = slot < par.bcounts[:, None]
+        appended = ~old & (slot < new_counts[:, None])
+        src = jnp.clip(seg_start[:, None] + (slot - par.bcounts[:, None]),
+                       0, size - 1)
+        buckets = jnp.where(appended, sk[src],
+                            jnp.where(old, par.buckets, INF))
+        bvals = jnp.where(appended, sv[src],
+                          jnp.where(old, par.bvals, EMPTY_VAL))
+        kmin = jnp.min(jnp.where(valid, keys, INF))
         par_min = jnp.minimum(par.par_min, kmin)
-        par_count = par.par_count + svalid.sum(dtype=_I32)
-        return (ParPart(buckets, bvals, bcounts, par.splitters, par_min,
+        par_count = par.par_count + valid.sum(dtype=_I32)
+        return (ParPart(buckets, bvals, new_counts, par.splitters, par_min,
                         par_count),
                 jnp.zeros((), _I32), jnp.zeros((), _I32))
 
     def slow(par):
         fk, fv = flatten_parallel(cfg, par)
-        allk = jnp.concatenate([fk, jnp.where(valid, keys, INF)])
-        allv = jnp.concatenate([fv, jnp.where(valid, vals, EMPTY_VAL)])
-        allk, allv = _sort_kv(allk, allv)
+        ck = jnp.where(valid, keys, INF)
+        cv = jnp.where(valid, vals, EMPTY_VAL)
+        if not assume_sorted:
+            ck, cv = _sort_kv(ck, cv)      # batch-sized sort only
+        allk, allv = rank_merge_kv(fk, fv, ck, cv)
         total = par.par_count + valid.sum(dtype=_I32)
         newpar, dropped = _redistribute(cfg, allk, allv, total)
         return newpar, jnp.ones((), _I32), dropped
@@ -293,12 +341,8 @@ def tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
     # -- 0. sanitize + sort the add batch (the elimination array contents) --
     ak = jnp.where(add_mask, add_keys.astype(_F32), INF)
     av = jnp.where(add_mask, add_vals.astype(_I32), EMPTY_VAL)
-    if cfg.backend == "pallas":
-        from repro.kernels import ops as kops
-        ak, av, _ = kops.sort_kvf(ak, av, jnp.zeros((A,), _I32),
-                                  backend="pallas")
-    else:
-        ak, av = _sort_kv(ak, av)
+    ak, av, _ = kops.sort_kvf(ak, av, jnp.zeros((A,), _I32),
+                              backend=cfg.backend)
     n_adds = add_mask.sum(dtype=_I32)
     a_valid = jnp.arange(A, dtype=_I32) < n_adds
 
@@ -326,18 +370,13 @@ def tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
     # in the elimination array).  Adds beyond the prefix are the server's
     # SL::addSeq() batch (combining).
     M = SC + A
-    if cfg.backend == "pallas":
-        # both streams are already sorted: rank-merge on the MXU
-        from repro.kernels import ops as kops
-        mk, mv, mf = kops.merge_sorted(
-            state.seq_keys, state.seq_vals, jnp.zeros((SC,), _I32),
-            small_k, small_v, small_mask.astype(_I32), backend="pallas")
-        mf = mf.astype(bool)
-    else:
-        mk = jnp.concatenate([state.seq_keys, small_k])
-        mv = jnp.concatenate([state.seq_vals, small_v])
-        mf = jnp.concatenate([jnp.zeros((SC,), bool), small_mask])  # is-add
-        mk, mv, mf = _sort_kvf(mk, mv, mf)
+    # both streams are already sorted: rank-merge (searchsorted scatter on
+    # the jnp backend, one-hot MXU matmul on pallas) — never a full
+    # O(M log M) sort of seq_cap + a_max keys
+    mk, mv, mf = kops.merge_sorted(
+        state.seq_keys, state.seq_vals, jnp.zeros((SC,), _I32),
+        small_k, small_v, small_mask.astype(_I32), backend=cfg.backend)
+    mf = mf.astype(bool)
 
     avail = state.seq_len + n_small
     s = jnp.minimum(r1, avail)
@@ -367,44 +406,65 @@ def tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
     new_len = new_len - spill_cnt
 
     # -- 5. SL::addPar(): scatter large adds (+ spill) into the buckets --
+    # large_k (suffix of the sorted batch) and sp_k (window of the sorted
+    # head) are each sorted: rank-merge them so the scatter can skip its
+    # grouping sort
     n_par_adds = jnp.sum(large_k < INF, dtype=_I32)
-    pk = jnp.concatenate([large_k, sp_k])
-    pv = jnp.concatenate([large_v, sp_v])
-    par, n_rebal, n_drop = scatter_parallel(cfg, _par_of(state), pk, pv)
+    pk, pv = rank_merge_kv(large_k, large_v, sp_k, sp_v)
+    par, n_rebal, n_drop = scatter_parallel(cfg, _par_of(state), pk, pv,
+                                            assume_sorted=True)
 
     # -- 6. shortfall => SL::moveHead(): detach a fresh sequential part --
+    # (gated on the POST-scatter parallel count: this tick's large adds
+    # are already in the buckets and must be servable; moveHead on an
+    # empty parallel part is a no-op and does not count as an event)
     r2 = r1 - s                      # removes that drained the merged stream
-    need_move = r2 > 0
+    need_move = (r2 > 0) & (par.par_count > 0)
 
     def do_move(par, nsk, nsv, new_len):
-        fk, fv = flatten_parallel(cfg, par)
+        # Selection-based extraction (DESIGN.md §6): the move needs only
+        # the max(detach_n, r2) smallest keys, so pull exactly those out
+        # of the bucket store — radix threshold + splitter pruning +
+        # bitonic of survivors on pallas, per-bucket sorted-run windows on
+        # jnp — deleting them in place (runs shift left).  The old path
+        # flattened + fully sorted + redistributed the whole parallel
+        # part on every shortfall tick.
+        K = cfg.move_k_max
         served = jnp.minimum(r2, par.par_count)
         k_extract = jnp.minimum(
             jnp.maximum(state.detach_n, r2), par.par_count)
-        out3_k = jnp.where(jnp.arange(cfg.par_cap, dtype=_I32) < served,
-                           fk, INF)
-        out3_v = jnp.where(jnp.arange(cfg.par_cap, dtype=_I32) < served,
-                           fv, EMPTY_VAL)
+        # the fresh head must fit the sequential part; seed silently lost
+        # the overflow past seq_cap, here we just detach less
+        k_extract = jnp.minimum(k_extract, served + SC)
+        sel_k, sel_v, nbk, nbv, nbc = kops.extract_k_bucketed(
+            par.buckets, par.bvals, par.bcounts, k_extract, K,
+            splitters=par.splitters, backend=cfg.backend)
+        ridx = jnp.arange(R, dtype=_I32)
+        out3_k = jnp.where(ridx < served, sel_k[jnp.clip(ridx, 0, K - 1)],
+                           INF)
+        out3_v = jnp.where(ridx < served, sel_v[jnp.clip(ridx, 0, K - 1)],
+                           EMPTY_VAL)
         # new sequential part = extracted window beyond the served prefix
         nlen = k_extract - served
-        nsk2 = _take_window(fk, served, SC, INF)
-        nsv2 = _take_window(fv, served, SC, EMPTY_VAL)
+        nsk2 = _take_window(sel_k, served, SC, INF)
+        nsv2 = _take_window(sel_v, served, SC, EMPTY_VAL)
         ok = jnp.arange(SC, dtype=_I32) < nlen
         nsk2 = jnp.where(ok, nsk2, INF)
         nsv2 = jnp.where(ok, nsv2, EMPTY_VAL)
-        # remainder back to the buckets (re-split the list)
-        rem_total = par.par_count - k_extract
-        rk = _shift_left(fk, k_extract, INF)
-        rv = _shift_left(fv, k_extract, EMPTY_VAL)
-        newpar, dropped = _redistribute(cfg, rk, rv, rem_total)
+        # ranges and splitters survive an in-place extraction: no
+        # redistribute, no drops
+        slotg = jnp.arange(cfg.bucket_cap, dtype=_I32)[None, :]
+        npar_min = jnp.min(jnp.where(slotg < nbc[:, None], nbk, INF))
+        newpar = ParPart(nbk, nbv, nbc, par.splitters, npar_min,
+                         par.par_count - k_extract)
         return (newpar, nsk2, nsv2, nlen, out3_k, out3_v, served,
-                jnp.ones((), _I32), dropped)
+                jnp.ones((), _I32), jnp.zeros((), _I32))
 
     def no_move(par, nsk, nsv, new_len):
         z = jnp.zeros((), _I32)
         return (par, nsk, nsv, new_len,
-                jnp.full((cfg.par_cap,), INF, _F32),
-                jnp.full((cfg.par_cap,), EMPTY_VAL, _I32), z, z, z)
+                jnp.full((R,), INF, _F32),
+                jnp.full((R,), EMPTY_VAL, _I32), z, z, z)
 
     (par, nsk, nsv, new_len, out3_k, out3_v, n_rm_par, moved,
      n_drop2) = jax.lax.cond(need_move, do_move, no_move,
@@ -422,10 +482,11 @@ def tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
     do_chop_pred = (quiet >= cfg.chop_patience) & (new_len > 0)
 
     def do_chop(par, nsk, nsv, new_len):
+        # both inputs are sorted (per-bucket runs merge + the sequential
+        # head), so folding the head back is a rank-merge, not a re-sort
+        # of the world
         fk, fv = flatten_parallel(cfg, par)
-        allk = jnp.concatenate([fk, nsk])
-        allv = jnp.concatenate([fv, nsv])
-        allk, allv = _sort_kv(allk, allv)
+        allk, allv = rank_merge_kv(fk, fv, nsk, nsv)
         total = par.par_count + new_len
         newpar, dropped = _redistribute(cfg, allk, allv, total)
         return (newpar, jnp.full((SC,), INF, _F32),
@@ -443,7 +504,7 @@ def tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
     # -- 9. assemble the removed stream: [imm elim | merged prefix | moved] --
     ridx = jnp.arange(R, dtype=_I32)
     seg2 = jnp.clip(ridx - n_imm, 0, M - 1)
-    seg3 = jnp.clip(ridx - n_imm - s, 0, cfg.par_cap - 1)
+    seg3 = jnp.clip(ridx - n_imm - s, 0, R - 1)
     rm_keys = jnp.where(
         ridx < n_imm, ak[jnp.clip(ridx, 0, A - 1)],
         jnp.where(ridx < n_imm + s, mk[seg2], out3_k[seg3]))

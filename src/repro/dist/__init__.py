@@ -1,0 +1,8 @@
+"""Distributed-execution helpers: logical-axis sharding over a mesh."""
+
+from repro.dist.sharding import (RULES_2D, RULES_3D, current_mesh, shard,
+                                 shard_activation_sp, spec, sp_rules,
+                                 use_mesh)
+
+__all__ = ["RULES_2D", "RULES_3D", "current_mesh", "shard",
+           "shard_activation_sp", "spec", "sp_rules", "use_mesh"]

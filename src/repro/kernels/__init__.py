@@ -11,8 +11,9 @@
                     these across shape/dtype sweeps.
 """
 
-from repro.kernels.ops import (merge_sorted, select_k_smallest,
-                               select_threshold, sort_kvf)
+from repro.kernels.ops import (extract_k_bucketed, merge_sorted,
+                               select_k_smallest, select_threshold,
+                               sort_kvf)
 
-__all__ = ["merge_sorted", "select_k_smallest", "select_threshold",
-           "sort_kvf"]
+__all__ = ["extract_k_bucketed", "merge_sorted", "select_k_smallest",
+           "select_threshold", "sort_kvf"]

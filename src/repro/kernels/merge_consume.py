@@ -14,8 +14,10 @@ scatter with computed indices is hostile to TPU; instead we:
 
 Positions are computed once into VMEM scratch at grid step 0 and reused by
 every output tile (the TPU grid is sequential, so scratch carries across
-steps).  Payload values ride through an f32 matmul: exact for
-``|val| < 2**24`` (asserted by the ops wrapper).
+steps).  Payload values ride through an f32 matmul: exact only for
+``|val| < 2**24``.  The ops wrapper (``ops._check_val_bound``) rejects
+concrete out-of-bound payloads eagerly; traced values are the caller's
+contract (the PQ tick's payloads are i32 batch indices, well inside it).
 
 VMEM budget per step: a-window S·T one-hot (e.g. 2048×256 f32 = 2 MiB) +
 payloads — comfortably under budget; the count matrix is chunked.

@@ -23,17 +23,48 @@ from repro.kernels.radix_select import radix_select_threshold
 INF = jnp.inf
 _I32 = jnp.int32
 
-#: interpret=True executes kernel bodies in Python on CPU (validation);
-#: on a real TPU backend this flips to False and Mosaic compiles them.
-INTERPRET = jax.default_backend() != "tpu"
-
 _VAL_EXACT_BOUND = 1 << 24  # payloads ride through f32 matmuls
+
+
+def _interpret() -> bool:
+    """interpret=True executes kernel bodies in Python on CPU (validation);
+    on a real TPU backend this flips to False and Mosaic compiles them.
+
+    Evaluated lazily (NOT at import): jax.default_backend() initializes
+    the JAX runtime, and importers must be able to set XLA flags (device
+    count, platform) after `import repro.core` but before first use.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _resolve(backend: str) -> str:
     if backend == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "jnp"
     return backend
+
+
+def _check_val_bound(*val_arrays) -> None:
+    """Reject payloads a f32 matmul cannot carry exactly (|v| >= 2**24).
+
+    The one-hot-matmul merge kernel routes int payloads through f32
+    contractions, which are exact only below 2**24.  Concrete (non-traced)
+    inputs are checked eagerly; traced/abstract values cannot be
+    validated without a checkify round-trip, so under jit the caller
+    contract stands unchecked (documented in merge_consume.py).
+    """
+    import numpy as np
+    for v in val_arrays:
+        try:
+            # concrete arrays convert; tracers raise (version-stable,
+            # unlike isinstance checks against jax.core.Tracer)
+            arr = np.asarray(v)
+        except Exception:
+            continue
+        if arr.size and np.abs(arr).max() >= _VAL_EXACT_BOUND:
+            raise ValueError(
+                f"payload magnitude {int(np.abs(arr).max())} >= 2**24; "
+                "values this large are not exactly representable through "
+                "the f32 one-hot matmul path (see merge_consume.py)")
 
 
 def sort_kvf(keys, vals, flags, *, backend: str = "auto"):
@@ -44,23 +75,59 @@ def sort_kvf(keys, vals, flags, *, backend: str = "auto"):
     if squeeze:
         keys, vals, flags = keys[None], vals[None], flags[None]
     ok, ov, of = bitonic_sort_kvf(keys, vals.astype(_I32),
-                                  flags.astype(_I32), interpret=INTERPRET)
+                                  flags.astype(_I32), interpret=_interpret())
     if squeeze:
         ok, ov, of = ok[0], ov[0], of[0]
     return ok, ov, of
 
 
+def _merge_sorted_corank(ak, av, af, bk, bv, bf):
+    """Gather-only rank merge (ties a-first), the fast jnp path.
+
+    Functionally identical to ref.ref_merge_sorted, but assembled with
+    searchsorted + gathers instead of position scatters: XLA CPU
+    serializes scatters, and even an argsort of the concatenation beats
+    them; co-rank gathers beat both (~1.8x over the argsort at 16k+4k).
+    """
+    n, m = ak.shape[0], bk.shape[0]
+    pa = jnp.arange(n, dtype=_I32) + jnp.searchsorted(
+        bk, ak, side="left").astype(_I32)
+    j = jnp.arange(n + m, dtype=_I32)
+    na = jnp.searchsorted(pa, j, side="right").astype(_I32)
+    ia = jnp.clip(na - 1, 0, n - 1)
+    from_a = pa[ia] == j
+    ib = jnp.clip(j - na, 0, m - 1)
+    ok = jnp.where(from_a, ak[ia], bk[ib])
+    ov = jnp.where(from_a, av[ia], bv[ib])
+    of = jnp.where(from_a, af[ia], bf[ib])
+    return ok, ov, of
+
+
 def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
                  backend: str = "auto"):
-    """Merge two sorted INF-padded streams; ties resolve a-first."""
+    """Merge two sorted INF-padded streams; ties resolve a-first.
+
+    Pallas path: payloads ride a f32 matmul, so |val| must be < 2**24
+    (validated here for concrete inputs), and n+m must be even (the output
+    is tiled; the tile shrinks to the largest power-of-two divisor, and an
+    odd total has none).
+    """
     if _resolve(backend) == "jnp":
-        return ref.ref_merge_sorted(ak, av, af, bk, bv, bf)
+        return _merge_sorted_corank(ak, av, af, bk, bv, bf)
+    _check_val_bound(av, bv)
     total = ak.shape[0] + bk.shape[0]
+    if total % 2:
+        # an odd total has no power-of-two tiling: the shrink loop below
+        # would previously divide tile to 0 and ZeroDivisionError out
+        raise ValueError(
+            f"merge_sorted(pallas) needs an even total length to tile the "
+            f"output; got n+m={total}. Pad one input by one slot or use "
+            f"backend='jnp'.")
     while total % tile:
-        tile //= 2
+        tile = max(tile // 2, 1)
     return merge_sorted_kvf(ak, av.astype(_I32), af.astype(_I32),
                             bk, bv.astype(_I32), bf.astype(_I32),
-                            tile=tile, interpret=INTERPRET)
+                            tile=tile, interpret=_interpret())
 
 
 def select_threshold(keys, k, *, backend: str = "auto"):
@@ -68,7 +135,66 @@ def select_threshold(keys, k, *, backend: str = "auto"):
     if _resolve(backend) == "jnp":
         return ref.ref_select_threshold(keys, k)
     return radix_select_threshold(keys, jnp.asarray(k, _I32),
-                                  interpret=INTERPRET)
+                                  interpret=_interpret())
+
+
+def _radix_select_sorted(flat, flatv, k, k_max: int, cand=None):
+    """Shared pallas selection core: radix threshold -> tie-rank split ->
+    cumsum compaction -> bitonic sort of the k_max survivors.
+
+    `cand` optionally masks elements that provably cannot be selected
+    (splitter-directory pruning); it never changes the result, only trims
+    the tie-rank scan.  Returns (out_k sorted INF-padded, out_v -1-padded,
+    sel — the exact selected positions in `flat`).
+    """
+    tau, n_below = select_threshold(flat, k, backend="pallas")
+    below = flat < tau
+    eq = flat == tau
+    if cand is not None:
+        below &= cand
+        eq &= cand
+    eq_rank = jnp.cumsum(eq.astype(_I32)) - 1
+    sel = below | (eq & (eq_rank < (k - n_below)))
+    pos = jnp.where(sel, jnp.cumsum(sel.astype(_I32)) - 1, k_max)
+    out_k = jnp.full((k_max,), INF, flat.dtype).at[pos].set(flat,
+                                                            mode="drop")
+    out_v = jnp.full((k_max,), -1, _I32).at[pos].set(flatv.astype(_I32),
+                                                     mode="drop")
+    zeros = jnp.zeros((k_max,), _I32)
+    out_k, out_v, _ = sort_kvf(out_k, out_v, zeros, backend="pallas")
+    return out_k, out_v, sel
+
+
+def sorted_runs_gather(keys2d, vals2d, counts, out_len: int):
+    """Merge the per-row sorted runs of a range-partitioned store into the
+    first `out_len` global ranks — all gathers, no scatter, no global sort.
+
+    Rows are sorted independently (BCAP-wide lanes, vectorized over
+    rows); because bucket key ranges are disjoint and ordered, each
+    sorted run is a contiguous block of global ranks starting at the
+    cumulative count offset, so output rank j gathers from the run that
+    contains it.  Returns (out_k INF-padded, out_v -1-padded, rk, rv)
+    where rk/rv are the row-sorted store (reused by callers that also
+    need per-row windows, e.g. extraction's survivor shift).
+    """
+    nb, bc = keys2d.shape
+    slot = jnp.arange(bc, dtype=_I32)[None, :]
+    live = slot < counts[:, None]
+    mk = jnp.where(live, keys2d, INF)
+    mv = jnp.where(live, vals2d, -1).astype(_I32)
+    order = jnp.argsort(mk, axis=-1)
+    rk = jnp.take_along_axis(mk, order, axis=-1)
+    rv = jnp.take_along_axis(mv, order, axis=-1)
+    cum = jnp.cumsum(counts)
+    offs = cum - counts
+    j = jnp.arange(out_len, dtype=_I32)
+    row = jnp.clip(jnp.searchsorted(cum, j, side="right"), 0,
+                   nb - 1).astype(_I32)
+    col = jnp.clip(j - offs[row], 0, bc - 1)
+    in_run = j < cum[nb - 1]
+    out_k = jnp.where(in_run, rk[row, col], INF)
+    out_v = jnp.where(in_run, rv[row, col], -1)
+    return out_k, out_v, rk, rv
 
 
 def select_k_smallest(keys, vals, k, k_max: int, *, backend: str = "auto"):
@@ -81,15 +207,94 @@ def select_k_smallest(keys, vals, k, k_max: int, *, backend: str = "auto"):
     if _resolve(backend) == "jnp":
         return ref.ref_select_k(keys, vals, k, k_max)
     k = jnp.minimum(jnp.asarray(k, _I32), k_max)
-    tau, n_below = select_threshold(keys, k, backend="pallas")
-    below = keys < tau
-    eq = keys == tau
-    eq_rank = jnp.cumsum(eq.astype(_I32)) - 1
-    sel = below | (eq & (eq_rank < (k - n_below)))
-    pos = jnp.where(sel, jnp.cumsum(sel.astype(_I32)) - 1, k_max)
-    out_k = jnp.full((k_max,), INF, keys.dtype).at[pos].set(keys, mode="drop")
-    out_v = jnp.full((k_max,), -1, _I32).at[pos].set(vals.astype(_I32),
-                                                     mode="drop")
-    zeros = jnp.zeros((k_max,), _I32)
-    out_k, out_v, _ = sort_kvf(out_k, out_v, zeros, backend="pallas")
+    out_k, out_v, _ = _radix_select_sorted(keys, vals, k, k_max)
     return out_k, out_v
+
+
+def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
+                       splitters=None, backend: str = "auto"):
+    """Extract (select + delete) the k smallest pairs from a bucket store.
+
+    The parallel part of the PQ keeps keys in ``[NB, BCAP]`` buckets whose
+    key ranges are disjoint and ordered (bucket i's keys all <= bucket
+    i+1's — maintained by the splitter directory).  That structure makes
+    moveHead extraction *sortless*:
+
+    * jnp path — sort each bucket row independently (BCAP-wide lanes,
+      vectorized over rows: O(L log BCAP) compare work, never an
+      O(L log L) global sort).  Each sorted run is a contiguous block of
+      global ranks, so the k smallest are a gather over run windows, and
+      deletion is a left-shift of each run by its selected-prefix length.
+      All gathers — XLA CPU serializes scatters, so none are used.
+    * pallas path — radix threshold over the flat stream (O(32 L)),
+      splitter-directory pruning of buckets that cannot hold survivors,
+      cumsum compaction, one bitonic sort of the k_max survivors; the
+      store is compacted around the selected slots.
+
+    Args:
+      keys2d: [NB, BCAP] f32, rows range-partitioned; slots >= counts[i]
+        ignored.
+      vals2d: [NB, BCAP] i32 payloads.
+      counts: [NB] i32 live slots per row.
+      k: traced scalar; clamped to the live total and k_max.
+      k_max: static output width (>= any k; power of two for pallas).
+      splitters: [NB] f32 optional per-bucket lower bounds (pallas pruning
+        only; pruning is a no-op for correctness, it trims the tie-rank
+        scan).
+
+    Returns (out_k [k_max] sorted ascending INF-padded, out_v [k_max]
+    payloads (-1 padded), new_keys2d, new_vals2d, new_counts) — the new
+    store holds exactly the unselected survivors, ranges preserved.
+    """
+    nb, bc = keys2d.shape
+    slot = jnp.arange(bc, dtype=_I32)[None, :]
+    live = slot < counts[:, None]
+    total = counts.sum(dtype=_I32)
+    k = jnp.minimum(jnp.minimum(jnp.asarray(k, _I32), total), k_max)
+
+    if _resolve(backend) == "jnp":
+        out_k, out_v, rk, rv = sorted_runs_gather(keys2d, vals2d, counts,
+                                                  k_max)
+        j = jnp.arange(k_max, dtype=_I32)
+        out_k = jnp.where(j < k, out_k, INF)
+        out_v = jnp.where(j < k, out_v, -1)
+        # deletion: the selected elements are each run's prefix of length
+        # clip(k - start, 0, count); survivors = run suffix, shifted left
+        offs = jnp.cumsum(counts) - counts           # run start ranks
+        nsel = jnp.clip(k - offs, 0, counts).astype(_I32)
+        new_counts = counts - nsel
+        keep = slot < new_counts[:, None]
+        src = jnp.clip(slot + nsel[:, None], 0, bc - 1)
+        new_k = jnp.where(keep, jnp.take_along_axis(rk, src, axis=-1), INF)
+        new_v = jnp.where(keep, jnp.take_along_axis(rv, src, axis=-1), -1)
+        return out_k, out_v, new_k, new_v, new_counts
+
+    if k_max & (k_max - 1):
+        raise ValueError(f"pallas extract_k_bucketed needs pow2 k_max, "
+                         f"got {k_max}")
+    mk = jnp.where(live, keys2d, INF)
+    mv = jnp.where(live, vals2d, -1).astype(_I32)
+    if splitters is not None:
+        # directory pruning: bucket b's elements all have global rank >=
+        # its cumulative start offset (ranges are disjoint and ordered by
+        # the splitter directory), so a bucket starting at rank >= k can
+        # contain no selected element — and because candidate buckets are
+        # a prefix of the flat order, pruning preserves the tie-rank
+        # selection order exactly.
+        offs = jnp.cumsum(counts) - counts
+        cand = jnp.broadcast_to((offs < k)[:, None], (nb, bc)).reshape(-1)
+    else:
+        cand = None
+    out_k, out_v, sel = _radix_select_sorted(
+        mk.reshape(-1), mv.reshape(-1), k, k_max, cand)
+    # compact each row around the selected slots
+    sel2 = sel.reshape(nb, bc)
+    keep = live & ~sel2
+    cpos = jnp.cumsum(keep.astype(_I32), axis=-1) - 1
+    cpos = jnp.where(keep, cpos, bc)
+    rows = jnp.arange(nb, dtype=_I32)[:, None]
+    new_k = jnp.full((nb, bc), INF, keys2d.dtype).at[rows, cpos].set(
+        mk, mode="drop")
+    new_v = jnp.full((nb, bc), -1, _I32).at[rows, cpos].set(mv, mode="drop")
+    new_counts = keep.sum(axis=-1, dtype=_I32)
+    return out_k, out_v, new_k, new_v, new_counts

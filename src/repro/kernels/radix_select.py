@@ -70,9 +70,23 @@ def _kernel(keys_ref, k_ref, tau_ref, nbelow_ref):
 def radix_select_threshold(keys, k, *, interpret: bool = True):
     """(tau, n_below) such that tau is the k-th smallest key of `keys`.
 
-    keys: [L] f32 (INF-padded); k: scalar i32 with 0 <= k <= #finite-keys
-    (k beyond the finite count returns tau=INF — callers clamp).
+    keys: [L] f32 (INF-padded) or [NB, BCAP] bucket rows (flattened
+    internally — the threshold is order-independent); k: scalar i32 with
+    0 <= k <= #finite-keys.
+
+    Edge guarantees (pinned by tests/test_kernels.py):
+      * k = 0            -> (tau=-inf, n_below=0): nothing selected.
+      * k > #finite      -> tau=INF, n_below=#finite (callers clamp k).
+      * all-INF stream   -> tau=INF for any k > 0.
+      * negative keys    -> exact (the float->uint32 map is monotone over
+                            the full float range, including -0.0/-INF).
+      * ties at tau      -> n_below counts strictly-below only; selecting
+                            all < tau plus (k - n_below) == tau yields
+                            exactly k (the eq_rank split in
+                            ops.select_k_smallest / select_k_bucketed).
     """
+    if keys.ndim == 2:
+        keys = keys.reshape(-1)
     length = keys.shape[0]
     k_arr = jnp.asarray(k, _I32).reshape((1,))
     full = lambda: (0,)  # noqa: E731

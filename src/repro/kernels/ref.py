@@ -52,3 +52,16 @@ def ref_select_k(keys, vals, k, k_max):
     idx = jnp.arange(k_max)
     return (jnp.where(idx < k, sk[jnp.clip(idx, 0, keys.shape[0] - 1)], INF),
             jnp.where(idx < k, sv[jnp.clip(idx, 0, keys.shape[0] - 1)], -1))
+
+
+def ref_extract_k_bucketed(keys2d, vals2d, counts, k, k_max):
+    """Oracle for ops.extract_k_bucketed's *extracted* stream: the full
+    sort of the masked flat store (the surviving store's slot layout is
+    implementation-defined; tests check it by multiset + range
+    properties instead)."""
+    slot = jnp.arange(keys2d.shape[1])[None, :]
+    valid = slot < counts[:, None]
+    flat = jnp.where(valid, keys2d, INF).reshape(-1)
+    flatv = jnp.where(valid, vals2d, -1).reshape(-1)
+    k = jnp.minimum(jnp.minimum(k, counts.sum()), k_max)
+    return ref_select_k(flat, flatv, k, k_max)

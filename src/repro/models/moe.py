@@ -153,11 +153,11 @@ def moe_apply_dist(params, cfg: ArchConfig, x, mesh
             aux = jax.lax.pmean(aux, other)
         return y, aux
 
-    mapped = jax.shard_map(
+    from repro.dist.sharding import shard_map
+    mapped = shard_map(
         body, mesh=mesh,
         in_specs=(batch_spec, P(), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
-        out_specs=(batch_spec, P()),
-        check_vma=False)
+        out_specs=(batch_spec, P()))
     return mapped(x, params["router"], params["wi_gate"],
                   params["wi_up"], params["wo"])

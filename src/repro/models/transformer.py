@@ -198,6 +198,22 @@ def _enc_dec_layer(gp, cfg: ArchConfig, x, mode: str, cache, pos, enc_out,
     return x, nc
 
 
+@jax.custom_vjp
+def _grad_transparent_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _gtb_fwd(x):
+    return _grad_transparent_barrier(x), None
+
+
+def _gtb_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_grad_transparent_barrier.defvjp(_gtb_fwd, _gtb_bwd)
+
+
 def _group_body(cfg: ArchConfig, pattern: str, mode: str):
     """Scan body applying one pattern group. xs = (group params, caches)."""
 
@@ -205,8 +221,10 @@ def _group_body(cfg: ArchConfig, pattern: str, mode: str):
         x, aux, pos, shared_attn, enc_out = carry
         # barrier: without it XLA hoists the first f32 convert of x out of
         # the backward while-loop, materializing the WHOLE saved-residual
-        # stack in f32 at once (12.6 GB on the 94-layer cell — §Perf)
-        x = jax.lax.optimization_barrier(x)
+        # stack in f32 at once (12.6 GB on the 94-layer cell — §Perf).
+        # optimization_barrier has no AD rule, so it rides a custom_vjp
+        # that barriers the cotangent symmetrically on the way back.
+        x = _grad_transparent_barrier(x)
         gp, caches = xs
         new_caches = {}
         for i, kind in enumerate(pattern):

@@ -1,0 +1,155 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The test container bakes in the jax/pallas toolchain but not hypothesis,
+and the suite may not install packages.  This shim implements exactly the
+surface the tests use — ``given``, ``settings`` (decorator + profiles),
+``HealthCheck``, and the ``strategies`` combinators ``floats``,
+``integers``, ``lists`` and ``tuples`` — as a deterministic seeded
+random-example driver.  It is NOT a property-testing framework (no
+shrinking, no example database); it simply runs each test body against
+``max_examples`` pseudo-random draws, seeded per-test so failures
+reproduce.
+
+``tests/conftest.py`` installs this module into ``sys.modules`` under the
+names ``hypothesis`` / ``hypothesis.strategies`` only when the real
+package is absent, so environments that do have hypothesis keep the real
+engine (shrinking included).
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+__version__ = "0.0-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class SearchStrategy:
+    """A strategy is just a draw(rng) -> value callable with boundary bias."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def draw(self, rng: random.Random, index: int):
+        # serve boundary examples first (hypothesis-ish edge bias)
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._draw(rng)
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=False, allow_infinity=False,
+           width=64):
+    del allow_nan, allow_infinity  # the shim never generates non-finite
+    import struct
+
+    def _snap(x):
+        if width == 32:  # round through f32 like hypothesis width=32
+            x = struct.unpack("f", struct.pack("f", x))[0]
+        return min(max(x, min_value), max_value)
+
+    def draw(rng):
+        return _snap(rng.uniform(min_value, max_value))
+
+    return SearchStrategy(draw, boundary=[_snap(min_value), _snap(max_value)])
+
+
+def integers(min_value, max_value):
+    def draw(rng):
+        return rng.randint(min_value, max_value)
+
+    return SearchStrategy(draw, boundary=[min_value, max_value])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.draw(rng, rng.randint(0, 10 ** 6)) for _ in
+                range(size)]
+
+    return SearchStrategy(draw, boundary=([[]] if min_size == 0 else ()))
+
+
+def tuples(*strats):
+    def draw(rng):
+        return tuple(s.draw(rng, rng.randint(0, 10 ** 6)) for s in strats)
+
+    return SearchStrategy(draw)
+
+
+# ---------------------------------------------------------------------------
+# settings / profiles / health checks
+# ---------------------------------------------------------------------------
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class settings:
+    """Both the @settings decorator and the profile registry."""
+
+    _profiles = {}
+    _current = {"max_examples": _DEFAULT_MAX_EXAMPLES}
+
+    def __init__(self, max_examples=None, deadline=None,
+                 suppress_health_check=(), **kw):
+        del deadline, suppress_health_check, kw
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._shim_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, deadline=None, max_examples=None, **kw):
+        cls._profiles[name] = {
+            "max_examples": max_examples or _DEFAULT_MAX_EXAMPLES}
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles.get(
+            name, {"max_examples": _DEFAULT_MAX_EXAMPLES}))
+
+
+# ---------------------------------------------------------------------------
+# given
+# ---------------------------------------------------------------------------
+
+def given(*strats):
+    def decorate(fn):
+        # NOTE: no functools.wraps — pytest introspects the wrapper's
+        # signature for fixture injection, and exposing the wrapped test's
+        # drawn-value parameters would make pytest look for fixtures of
+        # the same names.
+        def runner(*args, **kwargs):
+            n = getattr(fn, "_shim_max_examples",
+                        settings._current["max_examples"])
+            # deterministic per-test seed so failures reproduce across runs
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(base + i)
+                drawn = [s.draw(rng, i) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 — re-raise annotated
+                    raise AssertionError(
+                        f"falsifying example (shim draw {i}): {drawn!r}"
+                    ) from e
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.hypothesis_shim = True
+        return runner
+
+    return decorate

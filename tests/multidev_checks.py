@@ -20,6 +20,8 @@ import numpy as np  # noqa: E402
 import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.dist.sharding import make_mesh  # noqa: E402
+
 
 def check_distributed_pq():
     from repro.core import distributed as dpq
@@ -28,8 +30,7 @@ def check_distributed_pq():
 
     ndev = len(jax.devices())
     assert ndev == 8, ndev
-    mesh = jax.make_mesh((ndev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((ndev,), ("data",))
     cfg = PQConfig(a_max=16, r_max=16, seq_cap=2048, n_buckets=16,
                    bucket_cap=64, detach_min=8, detach_max=256,
                    detach_init=16)
@@ -80,8 +81,7 @@ def check_moe_parity():
     cfg = dataclasses.replace(
         reduced_config("qwen3-moe-235b-a22b"), n_experts=8, top_k=2,
         capacity_factor=8.0, dtype="float32")   # no-drop regime
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     params = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
                           jnp.float32) * 0.1
@@ -110,8 +110,7 @@ def check_sharded_train_step():
     cfg = dataclasses.replace(reduced_config("gemma-2b"), n_layers=2,
                               vocab=512)
     tcfg = TrainConfig(n_micro=2, fsdp=True, zero1=True)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     with use_mesh(mesh):
         state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
         st_shape = jax.eval_shape(lambda: state)
@@ -137,8 +136,7 @@ def check_sharded_decode():
 
     cfg = dataclasses.replace(reduced_config("gemma-2b"), n_layers=2,
                               vocab=512)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     with use_mesh(mesh):
         params = tf.init_params(cfg, jax.random.PRNGKey(0))
         caches = tf.init_decode_caches(cfg, 8, 32)
@@ -163,8 +161,7 @@ def check_distributed_pq_v2():
     from repro.core.ref_pq import RefPQ
 
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((ndev,), ("data",))
     cfg = PQConfig(a_max=16, r_max=16, seq_cap=1024, n_buckets=8,
                    bucket_cap=32, detach_min=8, detach_max=128,
                    detach_init=16)

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.dist.sharding import make_mesh
+
 from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
 
 
@@ -75,8 +77,7 @@ def test_atomic_save_no_partial(tmp_path):
 def test_restore_onto_current_devices(tmp_path):
     """Restore with explicit shardings (single-device 'elastic' path)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     tree = _tree()
     save_checkpoint(tmp_path, 2, tree)
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

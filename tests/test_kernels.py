@@ -140,6 +140,145 @@ def test_select_k_smallest_composite():
         np.testing.assert_array_equal(np.asarray(gv), np.asarray(ev))
 
 
+@pytest.mark.parametrize("length", [64, 1024])
+def test_radix_threshold_edges(length):
+    """Pinned edge guarantees (see radix_select_threshold docstring):
+    k=0, all-INF streams, negative keys, k past the finite count."""
+    # k = 0 -> sentinel (-inf, 0) regardless of content
+    keys = jnp.asarray(np.random.default_rng(0).uniform(
+        -5, 5, length), jnp.float32)
+    tau, nb = radix_select_threshold(keys, 0)
+    assert float(tau) == -np.inf and int(nb) == 0
+
+    # all-INF stream: any k > 0 hits the INF ceiling
+    inf_keys = jnp.full((length,), jnp.inf, jnp.float32)
+    for k in (1, length // 2, length):
+        tau, nb = radix_select_threshold(inf_keys, k)
+        assert float(tau) == np.inf and int(nb) == 0
+
+    # negative keys (the float->uint32 monotone map's sign branch)
+    neg = np.sort(-np.abs(np.random.default_rng(1).uniform(
+        0.5, 100, length))).astype(np.float32)
+    shuffled = neg.copy()
+    np.random.default_rng(2).shuffle(shuffled)
+    for k in (1, 7, length):
+        tau, nb = radix_select_threshold(jnp.asarray(shuffled), k)
+        assert float(tau) == neg[k - 1]
+        assert int(nb) == int((neg < neg[k - 1]).sum())
+
+    # k beyond the finite count: tau=INF, n_below = #finite
+    half = np.full(length, np.inf, np.float32)
+    half[: length // 2] = np.random.default_rng(3).uniform(
+        0, 10, length // 2)
+    tau, nb = radix_select_threshold(jnp.asarray(half), length)
+    assert float(tau) == np.inf and int(nb) == length // 2
+
+
+def test_radix_threshold_accepts_bucket_rows():
+    rng = np.random.default_rng(5)
+    k2 = rng.uniform(0, 100, (8, 32)).astype(np.float32)
+    tau2, nb2 = radix_select_threshold(jnp.asarray(k2), 17)
+    tau1, nb1 = radix_select_threshold(jnp.asarray(k2.reshape(-1)), 17)
+    assert float(tau2) == float(tau1) and int(nb2) == int(nb1)
+
+
+def test_select_k_smallest_tie_split():
+    """Ties at the threshold resolve by eq_rank: exactly k selected, and
+    the tied survivors are the earliest occurrences in stream order."""
+    keys = np.array([5.0, 3.0, 5.0, 1.0, 5.0, 5.0, 2.0, 5.0],
+                    np.float32)
+    vals = np.arange(8, dtype=np.int32)
+    # k=5: 1, 2, 3 below tau=5; exactly TWO of the five 5.0s join
+    gk, gv = ops.select_k_smallest(jnp.asarray(keys), jnp.asarray(vals),
+                                   5, 8, backend="pallas")
+    np.testing.assert_array_equal(
+        np.asarray(gk)[:5], [1.0, 2.0, 3.0, 5.0, 5.0])
+    assert np.isinf(np.asarray(gk)[5:]).all()
+    # earliest 5.0s in stream order hold vals {0, 2}
+    assert set(np.asarray(gv)[3:5].tolist()) == {0, 2}
+
+
+def test_merge_sorted_rejects_odd_total():
+    """Odd n+m used to ZeroDivisionError in the tile shrink loop."""
+    a = jnp.sort(jnp.asarray(np.random.default_rng(0).uniform(
+        0, 10, 7), jnp.float32))
+    b = jnp.sort(jnp.asarray(np.random.default_rng(1).uniform(
+        0, 10, 4), jnp.float32))
+    za, zb = jnp.zeros(7, jnp.int32), jnp.zeros(4, jnp.int32)
+    with pytest.raises(ValueError, match="even total"):
+        ops.merge_sorted(a, za, za, b, zb, zb, backend="pallas")
+    # jnp backend has no tiling constraint
+    ok, _, _ = ops.merge_sorted(a, za, za, b, zb, zb, backend="jnp")
+    assert ok.shape == (11,)
+
+
+def test_merge_sorted_rejects_oversized_payloads():
+    """|val| >= 2**24 would lose bits in the f32 one-hot matmul."""
+    n = 8
+    a = jnp.asarray(np.arange(n), jnp.float32)
+    b = jnp.asarray(np.arange(n) + 0.5, jnp.float32)
+    big = jnp.full((n,), 1 << 24, jnp.int32)
+    z = jnp.zeros(n, jnp.int32)
+    with pytest.raises(ValueError, match="2\\*\\*24"):
+        ops.merge_sorted(a, big, z, b, z, z, backend="pallas")
+    # in-bounds payloads pass
+    ok_v = jnp.full((n,), (1 << 24) - 1, jnp.int32)
+    ops.merge_sorted(a, ok_v, z, b, z, z, backend="pallas")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_extract_k_bucketed(backend):
+    """Extraction == oracle k-smallest; survivors conserve the multiset
+    and keep the range partition."""
+    rng = np.random.default_rng(11)
+    nb, bc, k_max = 8, 16, 32
+    splitters = np.full(nb, np.inf, np.float32)
+    edges = np.sort(rng.uniform(0, 100, nb - 1))
+    splitters[0] = -np.inf
+    splitters[1:] = edges
+    keys = np.full((nb, bc), np.inf, np.float32)
+    vals = np.full((nb, bc), -1, np.int32)
+    counts = rng.integers(0, bc + 1, nb).astype(np.int32)
+    nv = 0
+    lo = np.concatenate([[0.0], edges])
+    hi = np.concatenate([edges, [100.0]])
+    for r in range(nb):
+        keys[r, :counts[r]] = rng.uniform(lo[r], hi[r], counts[r])
+        vals[r, :counts[r]] = np.arange(nv, nv + counts[r])
+        nv += counts[r]
+    total = int(counts.sum())
+    for k in (0, 1, total // 2, min(total, k_max)):
+        keff = min(k, total, k_max)   # extraction clamps to store + k_max
+        out_k, out_v, nk, nvv, ncnt = ops.extract_k_bucketed(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(counts), k,
+            k_max, splitters=jnp.asarray(splitters), backend=backend)
+        ek, ev = ref.ref_extract_k_bucketed(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(counts), k,
+            k_max)
+        np.testing.assert_array_equal(
+            np.nan_to_num(np.asarray(out_k), posinf=1e30),
+            np.nan_to_num(np.asarray(ek), posinf=1e30))
+        np.testing.assert_array_equal(np.asarray(out_v), np.asarray(ev))
+        # survivors: counts drop by keff, multiset conserved, ranges kept
+        ncnt = np.asarray(ncnt)
+        assert ncnt.sum() == total - keff
+        surv = []
+        nk = np.asarray(nk)
+        nvv = np.asarray(nvv)
+        for r in range(nb):
+            row = list(zip(nk[r, :ncnt[r]], nvv[r, :ncnt[r]]))
+            assert all(splitters[r] <= kk for kk, _ in row)
+            surv += row
+        everything = sorted(
+            zip(np.asarray(out_k)[:keff].tolist(),
+                np.asarray(out_v)[:keff].tolist())) + sorted(surv)
+        expected = []
+        for r in range(nb):
+            expected += zip(keys[r, :counts[r]].tolist(),
+                            vals[r, :counts[r]].tolist())
+        assert sorted(everything) == sorted(expected)
+
+
 # ---------------------------------------------------------------------------
 # pallas-backed tick == jnp tick (the integrated hot path)
 # ---------------------------------------------------------------------------

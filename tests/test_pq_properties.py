@@ -93,6 +93,21 @@ def test_duplicate_keys_conserved():
     drive(TINY, init, tick, ops)
 
 
+def test_movehead_serves_same_tick_parallel_adds():
+    """Regression: with an EMPTY parallel part, a tick whose adds scatter
+    into the buckets (key > lastSeq) and whose removes exceed the
+    sequential part must still serve from those same-tick adds (the
+    moveHead gate must look at the post-scatter count, not the pre-tick
+    one)."""
+    ops = [
+        ([0.0, 1.0, 2.0, 3.0], 0),   # all 4 adds scatter to the par part
+        ([], 1),                     # moveHead drains par fully: seq=[1,2,3]
+        ([100.0], 4),                # par add + removes past the seq part
+        ([], 4),                     # drain the rest
+    ]
+    drive(TINY, init, tick, ops)
+
+
 def test_empty_removes_return_sentinel():
     state = init(TINY)
     ak = jnp.full((TINY.a_max,), jnp.inf, jnp.float32)

@@ -1,0 +1,137 @@
+"""Relaxed-semantics property tests for the multi-lane sharded queue.
+
+The sharded queue (repro.core.sharded) is NOT linearizable against the
+single-queue oracle: a tick of r removeMin() ops returns *near-minimal*
+keys.  The contract checked here is the MultiQueues-style c-relaxation:
+
+    every key removed by a tick lies within the c smallest keys of the
+    union state (pre-tick contents + this tick's adds), with
+    c = relax_bound(cfg, r) = r + L * ceil(r / L) + 2 * L * lane.a_max
+    (the last term covers lane-local elimination, whose depth is bounded
+    by a lane's head, which trails the union minimum by at most the
+    lane's arrival share — see relax_bound's docstring),
+
+plus strict multiset conservation (nothing invented, nothing lost, router
+drops counted), which IS exact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PQConfig
+from repro.core import sharded as shq
+from repro.core.config import EMPTY_VAL
+
+W = 64
+BASE = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16, bucket_cap=32,
+                detach_min=4, detach_max=64, detach_init=8, chop_patience=8)
+
+
+def _tick(cfg, state, keys, vals, n_rm):
+    ak = np.full((W,), np.inf, np.float32)
+    av = np.full((W,), EMPTY_VAL, np.int32)
+    mask = np.zeros((W,), bool)
+    ak[:len(keys)] = keys
+    av[:len(keys)] = vals
+    mask[:len(keys)] = True
+    return shq.tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
+                    jnp.asarray(mask), jnp.asarray(n_rm))
+
+
+@pytest.mark.parametrize("lanes", [2, 8])
+def test_sharded_c_relaxed_removals(lanes):
+    """Every removed key is within the c smallest of the union state."""
+    cfg = shq.make_sharded_cfg(W, lanes, base=BASE)
+    state = shq.init(cfg, seed=1)
+    rng = np.random.default_rng(42)
+    mirror = []         # exact union multiset (python mirror)
+    next_val = 0
+
+    # keep standing load under half the lanes' parallel capacity: beyond
+    # that the lanes' own capacity-drop policy kicks in (the largest keys
+    # are shed and counted), which the python mirror cannot follow
+    load_cap = lanes * cfg.lane.par_cap // 2
+    for t in range(40):
+        n_add = int(rng.integers(0, W + 1))
+        n_add = min(n_add, load_cap - len(mirror))
+        n_rm = int(rng.integers(0, W // 2 + 1))
+        keys = np.round(rng.uniform(0, 1000, n_add), 3).astype(np.float32)
+        vals = np.arange(next_val, next_val + n_add, dtype=np.int32)
+        next_val += n_add
+
+        combined = sorted(mirror + keys.tolist())
+        c = shq.relax_bound(cfg, n_rm)
+        cutoff = combined[c - 1] if c <= len(combined) else np.inf
+
+        state, res = _tick(cfg, state, keys, vals, n_rm)
+        got = np.asarray(res.rm_keys)[np.asarray(res.rm_served)]
+
+        assert len(got) <= n_rm
+        for k in got:
+            assert k <= cutoff, (
+                f"tick {t}: removed {k} beyond the c={c} smallest "
+                f"(cutoff {cutoff}) of a union of {len(combined)}")
+            combined.remove(float(np.float32(k)))  # must exist: conservation
+        mirror = combined
+
+        assert int(state.n_router_dropped) == 0
+        assert int(state.lanes.stats.n_dropped.sum()) == 0
+        assert int(shq.size(state)) == len(mirror)
+
+
+@pytest.mark.parametrize("lanes", [2, 8])
+def test_sharded_drains_exactly(lanes):
+    """Relaxed removal order, exact multiset: draining returns every key."""
+    cfg = shq.make_sharded_cfg(W, lanes, base=BASE)
+    state = shq.init(cfg, seed=3)
+    rng = np.random.default_rng(7)
+    inserted = []
+    next_val = 0
+    for t in range(8):
+        keys = rng.uniform(0, 100, W // 2).astype(np.float32)
+        vals = np.arange(next_val, next_val + len(keys), dtype=np.int32)
+        next_val += len(keys)
+        inserted += keys.tolist()
+        state, _ = _tick(cfg, state, keys, vals, 0)
+
+    drained = []
+    for _ in range(64):
+        state, res = _tick(cfg, state, np.array([], np.float32),
+                           np.array([], np.int32), W)
+        got = np.asarray(res.rm_keys)[np.asarray(res.rm_served)]
+        if len(got) == 0:
+            break
+        drained += got.tolist()
+    assert int(shq.size(state)) == 0
+    assert sorted(np.float32(x) for x in drained) == sorted(
+        np.float32(x) for x in inserted)
+
+
+def test_sharded_router_sticks_and_resamples():
+    cfg = shq.make_sharded_cfg(W, 4, base=BASE)
+    assert cfg.stick > 1
+    state = shq.init(cfg, seed=0)
+    routes = []
+    for t in range(cfg.stick + 1):
+        state, _ = _tick(cfg, state, np.arange(8, dtype=np.float32),
+                         np.arange(8, dtype=np.int32), 0)
+        routes.append(np.asarray(state.route).copy())
+    # pinned within a stick window...
+    for t in range(1, cfg.stick):
+        np.testing.assert_array_equal(routes[0], routes[t])
+    # ...and resampled at the boundary
+    assert not np.array_equal(routes[0], routes[cfg.stick])
+
+
+def test_sharded_spreads_load_across_lanes():
+    cfg = shq.make_sharded_cfg(W, 8, base=BASE)
+    state = shq.init(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        keys = rng.uniform(0, 1000, W).astype(np.float32)
+        state, _ = _tick(cfg, state, keys,
+                         np.arange(W, dtype=np.int32), 0)
+    sizes = np.asarray(shq.lane_sizes(state))
+    assert (sizes > 0).all(), f"idle lanes: {sizes}"
+    assert sizes.sum() == 8 * W
