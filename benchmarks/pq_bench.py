@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import FCPQ, ParallelPQ, PQConfig, init, tick
+from repro.core import pqueue
 from repro.core import sharded as shq
 from repro.core.config import EMPTY_VAL
 
@@ -45,6 +46,13 @@ IMPLS = {
     "fcskiplist": (FCPQ.init, FCPQ.tick),
     "lfskiplist": (ParallelPQ.init, ParallelPQ.tick),
     "sharded": (shq.init, shq.tick),
+}
+
+#: lax.scan multi-tick drivers (one dispatch per measured run; amortizes
+#: per-tick dispatch, which at ms-scale ticks is a measurable slice)
+TICK_N = {
+    "pqe": pqueue.tick_n,
+    "sharded": shq.tick_n,
 }
 
 
@@ -74,7 +82,8 @@ def _warm(cfg, impl_init, impl_tick, rng):
 
 def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
               seed: int = 0, key_dist: str = "uniform",
-              lanes: int = DEFAULT_LANES) -> Dict[str, float]:
+              lanes: int = DEFAULT_LANES,
+              scan: bool = True) -> Dict[str, float]:
     """Throughput of one implementation at one width and add-fraction.
 
     key_dist:
@@ -85,7 +94,9 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
         scheduler workload, where elimination thrives.
 
     `lanes` only affects impl="sharded" (relaxed semantics: its removes
-    are near-minimal, not exact — see repro.core.sharded).
+    are near-minimal, not exact — see repro.core.sharded).  `scan=True`
+    drives impls that provide a `tick_n` scan driver (TICK_N) with one
+    dispatch for the whole run; others fall back to the eager loop.
 
     Returns {us_per_tick, mops_per_s, ...stats}.
     """
@@ -116,15 +127,29 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
                         jnp.asarray(mask)))
     rmc = jnp.asarray(n_rm, jnp.int32)
 
-    # warmup/compile
-    s2, _ = impl_tick(cfg, state, *batches[0], rmc)
-    jax.block_until_ready(s2)
-
-    t0 = time.perf_counter()
-    for t in range(ticks):
-        state, res = impl_tick(cfg, state, *batches[t], rmc)
-    jax.block_until_ready(state)
-    dt = time.perf_counter() - t0
+    # the donating ticks consume their state argument: warm up / compile
+    # on a throwaway copy so the measured run starts from the warm state
+    spare = jax.tree.map(jnp.copy, state)
+    tn = TICK_N.get(impl) if scan else None
+    if tn is not None:
+        stak = jnp.stack([b[0] for b in batches])
+        stav = jnp.stack([b[1] for b in batches])
+        stam = jnp.stack([b[2] for b in batches])
+        rms = jnp.full((ticks,), n_rm, jnp.int32)
+        s2, _ = tn(cfg, spare, stak, stav, stam, rms)
+        jax.block_until_ready(s2)
+        t0 = time.perf_counter()
+        state, res = tn(cfg, state, stak, stav, stam, rms)
+        jax.block_until_ready(state)
+        dt = time.perf_counter() - t0
+    else:
+        s2, _ = impl_tick(cfg, spare, *batches[0], rmc)
+        jax.block_until_ready(s2)
+        t0 = time.perf_counter()
+        for t in range(ticks):
+            state, res = impl_tick(cfg, state, *batches[t], rmc)
+        jax.block_until_ready(state)
+        dt = time.perf_counter() - t0
 
     out = {
         "us_per_tick": dt / ticks * 1e6,

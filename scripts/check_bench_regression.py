@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""CI perf gate: fail when any impl regresses vs the committed BENCH_pq.json.
+
+Usage:
+    python scripts/check_bench_regression.py BASELINE.json FRESH.json \
+        [--tol 0.25]
+
+Absolute us_per_tick numbers are not comparable across machines (the
+committed baseline was measured on a dev box, CI runs elsewhere), so
+each impl is compared on its share of the cell's total speed: every
+cell's timings are normalized by the geometric mean over the impls
+present in BOTH files, and an impl fails if its normalized time grew by
+more than --tol (default 25%).  A uniformly slower machine cancels out.
+
+Caveat: the normalization couples impls — a PR that intentionally
+speeds up SOME impls shifts the geomean and makes the untouched ones
+look relatively slower.  That is by design: any PR that changes
+relative performance must re-run `benchmarks/run.py --smoke` and commit
+the fresh BENCH_pq.json (then baseline == CI measurement and the gate
+passes); the gate exists to catch perf-relevant changes shipped WITHOUT
+re-baselining.  An impl present only in one file is reported but not
+gated (lets the sweep grow lanes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def _normalized(cell: dict, keys: list) -> dict:
+    gm = math.exp(sum(math.log(cell[k]) for k in keys) / len(keys))
+    return {k: cell[k] / gm for k in keys}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed relative growth of an impl's "
+                         "machine-normalized us_per_tick")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)["results"]
+    with open(args.fresh) as f:
+        fresh = json.load(f)["results"]
+
+    failures = []
+    for cell_name in sorted(set(base) & set(fresh)):
+        bcell, fcell = base[cell_name], fresh[cell_name]
+        shared = sorted(set(bcell) & set(fcell))
+        if len(shared) < 2:
+            print(f"{cell_name}: <2 shared impls, skipping")
+            continue
+        bn = _normalized(bcell, shared)
+        fn = _normalized(fcell, shared)
+        for impl in shared:
+            ratio = fn[impl] / bn[impl]
+            flag = "REGRESSION" if ratio > 1 + args.tol else "ok"
+            print(f"{cell_name}/{impl}: normalized {bn[impl]:.3f} -> "
+                  f"{fn[impl]:.3f} (x{ratio:.2f}) {flag}")
+            if ratio > 1 + args.tol:
+                failures.append((cell_name, impl, ratio))
+        for impl in sorted(set(bcell) ^ set(fcell)):
+            where = "baseline" if impl in bcell else "fresh"
+            print(f"{cell_name}/{impl}: only in {where}, not gated")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} impl(s) regressed more than "
+              f"{args.tol:.0%} (machine-normalized):")
+        for cell, impl, ratio in failures:
+            print(f"  {cell}/{impl}: x{ratio:.2f}")
+        print("If this PR changed performance on purpose (including "
+              "speeding OTHER impls up — the normalization couples "
+              "them), regenerate the baseline:\n"
+              "  PYTHONPATH=src:. python benchmarks/run.py --smoke\n"
+              "and commit the fresh BENCH_pq.json.")
+        return 1
+    print("\nOK: no impl regressed beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -237,12 +237,16 @@ def local_tick_v2(cfg: PQConfig, state: DistState, add_keys, add_vals,
     # the replicated PQState's own parallel part is EMPTY by construction:
     # every large add went to a device shard, so tick()'s internal
     # emergency path would find nothing — handle shortfall ourselves
+    # pqueue.tick donates its state argument: snapshot the counter the
+    # shortfall check needs BEFORE the call (safe under shard_map tracing
+    # where donation is ignored, AND under any future eager use)
+    rm_empty_before = rep.stats.rm_empty
     new_rep, gres = pqueue.tick(gcfg, rep, small_keys, small_vals,
                                 small, g_rm)
 
     # 5. distributed moveHead: if the head drained (or ran short), gather
     #    per-device candidate prefixes and rebuild the replicated head
-    shortfall = (new_rep.stats.rm_empty - rep.stats.rm_empty) > 0
+    shortfall = (new_rep.stats.rm_empty - rm_empty_before) > 0
     need = (new_rep.seq_len <= 0) & ((g_rm > 0) | shortfall)
 
     def do_move(par, new_rep):

@@ -1,8 +1,14 @@
-"""Multi-lane sharded priority queue: vmapped APEX-Q lanes (MultiQueues).
+"""Multi-lane sharded priority queue: lane-native APEX-Q lanes (MultiQueues).
 
-Scaling axis beyond one combined tick: L independent :mod:`pqueue` lanes,
-ticked together under one ``jax.vmap`` (the Pallas kernels already take a
-rows grid, so the lanes ride the same compiled program).  Semantics follow
+Scaling axis beyond one combined tick: L independent :mod:`pqueue` lanes
+ticked together in ONE synchronized round.  Only the unconditional tick
+head runs under ``jax.vmap``; every data-dependent pass (combine,
+scatter, rebalance, moveHead, chopHead) has its predicate reduced
+ACROSS lanes and runs lane-major — all lanes through one leading-axis
+kernel call — under a batch-level ``lax.cond`` that fires only when
+some lane needs it (DESIGN.md §6.1: ``vmap`` lowers ``lax.cond`` to
+``select``, which would make every lane pay every rare path on every
+tick).  Semantics follow
 the relaxed priority queues of Rihani, Sanders & Dementiev 2014
 ("MultiQueues: Simpler, Faster, and Better Relaxed Concurrent Priority
 Queues") combined with the explicit-synchronization batching of Aksenov &
@@ -15,9 +21,9 @@ all lanes:
   resampling.  Sticking amortizes routing state and models MultiQueues'
   thread-local queue affinity; permuting a balanced pattern (instead of
   i.i.d. draws) caps any lane's share of a batch at ``ceil(W / L)`` by
-  construction, so lane quotas with 2x slack can never drop an add, while
-  the randomness still decorrelates lanes from key order — which is what
-  bounds the rank error of removals.
+  construction, so ceil(W/L)-sized lane quotas can never drop an add,
+  while the randomness still decorrelates lanes from key order — which
+  is what bounds the rank error of removals.
 * **removes** use a *c-relaxed min-of-lane-heads* policy: the batch of r
   removeMin() ops is split evenly across lanes (each lane serves its own
   exact minima), with the remainder and any shortfall redistribution
@@ -46,6 +52,8 @@ import jax.numpy as jnp
 
 from repro.core import pqueue
 from repro.core.config import EMPTY_VAL, PQConfig
+from repro.kernels import ops as kops
+from repro.kernels.radix_select import _from_sortable_u32, _to_sortable_u32
 
 INF = jnp.inf
 _I32 = jnp.int32
@@ -56,10 +64,11 @@ _F32 = jnp.float32
 class ShardedPQConfig:
     """Static config: `lane` is the per-lane PQConfig, `n_lanes` = L.
 
-    ``lane.a_max``/``lane.r_max`` bound PER-LANE batch shares; with a
-    balanced router a 2x slack over width/L keeps overflow probability
-    negligible (binomial tail), and overflowing adds are *dropped and
-    counted* (n_router_dropped) rather than silently lost.
+    ``lane.a_max``/``lane.r_max`` bound PER-LANE batch shares; the
+    permuted round-robin router is balanced by construction, so
+    ceil(width/L) quotas (slack 1.0 in make_sharded_cfg) can never
+    overflow; if a caller under-sizes them anyway, overflowing adds are
+    *dropped and counted* (n_router_dropped) rather than silently lost.
     """
 
     lane: PQConfig
@@ -87,17 +96,25 @@ class ShardedPQConfig:
 
 
 def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
-                     slack: float = 2.0) -> ShardedPQConfig:
+                     slack: float = 1.0) -> ShardedPQConfig:
     """Scale a width-`width` single-queue config down to L lanes.
 
     Per-lane batch geometry is ceil(slack * width / L) (clamped to
-    [8, width]); structure capacities shrink by ~L with the same slack.
+    [8, width]); structure capacities shrink by ~L.  slack defaults to
+    1.0: the permuted round-robin router is balanced BY CONSTRUCTION —
+    a lane appears exactly ceil(W/L) times in the route, so no mask can
+    ever exceed the quota and extra slack would only widen every per-lane
+    sort/merge/scatter shape (the lanes' whole advantage is that those
+    shapes shrink by L; see DESIGN.md §6.1).  The sequential part gets
+    the minimum legal headroom (2*per + 2): per-lane combine cost is
+    dominated by the seq_cap + a_max merge, and a lane only ever needs
+    its own share of head room, not base.seq_cap / L.
     """
     per = max(8, min(width, int(-(-slack * width // n_lanes))))
     lane = dataclasses.replace(
         base,
         a_max=per, r_max=per,
-        seq_cap=max(base.seq_cap // n_lanes, 2 * per + 2),
+        seq_cap=2 * per + 2,
         bucket_cap=max(base.bucket_cap // n_lanes, 8),
     )
     return ShardedPQConfig(lane=lane, n_lanes=n_lanes, a_total=width)
@@ -107,14 +124,19 @@ class ShardedState(NamedTuple):
     lanes: pqueue.PQState      # stacked pytree: every leaf has lead dim L
     rng: jnp.ndarray           # PRNG key for the router
     route: jnp.ndarray         # [a_max_total] current lane assignment
+    route_inv: jnp.ndarray     # [a_max_total] argsort(route, stable): lane-
+                               # grouped slot ids, refreshed with route —
+                               # turns per-tick routing into static-segment
+                               # gathers (the grouping sort happens once per
+                               # resample, not once per tick)
     tick_idx: jnp.ndarray      # scalar i32 (drives re-sticking)
     n_router_dropped: jnp.ndarray   # adds dropped on lane-quota overflow
 
 
 class ShardedTickResult(NamedTuple):
     """Compacted removal stream.  Width = max(a_total, n_lanes *
-    lane.r_max) — wider than the a_total input batch because lane quotas
-    carry 2x slack, so up to L * r_lane removals can be served."""
+    lane.r_max) >= the a_total input batch (up to L * r_lane removals
+    can be served)."""
 
     rm_keys: jnp.ndarray       # [out_w] f32, INF where unserved
     rm_vals: jnp.ndarray       # [out_w] i32
@@ -134,6 +156,7 @@ def init(cfg: ShardedPQConfig, *, seed: int = 0) -> ShardedState:
         lanes=_stack_init(cfg),
         rng=jax.random.PRNGKey(seed),
         route=jnp.zeros((cfg.a_total,), _I32),
+        route_inv=jnp.arange(cfg.a_total, dtype=_I32),
         tick_idx=jnp.zeros((), _I32),
         n_router_dropped=jnp.zeros((), _I32),
     )
@@ -151,12 +174,18 @@ def _fresh_route(key, w: int, n_lanes: int) -> jnp.ndarray:
 
 
 def _route_adds(cfg: ShardedPQConfig, route, add_keys, add_vals, add_mask):
-    """Distribute the add batch to per-lane [L, a_lane] arrays.
+    """Distribute the add batch to per-lane [L, a_lane] arrays (slot
+    order).
 
     One stable argsort by lane id groups each lane's elements into a
     contiguous segment of the batch; each lane then gathers its segment
     window (scatter-free, same trick as pqueue.scatter_parallel).
     Elements past a lane's a_max quota are dropped and counted.
+
+    This is the REFERENCE router: the production tick uses
+    :func:`_route_adds_sorted` (resample-amortized grouping + fused
+    per-lane key sort); tests/test_tick_repairs.py routes through this
+    one to pin the fused path against ``jax.vmap(pqueue.tick)``.
     """
     L, al = cfg.n_lanes, cfg.lane.a_max
     w = add_keys.shape[0]
@@ -179,7 +208,59 @@ def _route_adds(cfg: ShardedPQConfig, route, add_keys, add_vals, add_mask):
     return lk, lv, taken, n_in - n_routed
 
 
-def _alloc_removes(cfg: ShardedPQConfig, lanes: pqueue.PQState, rm_count):
+def _route_adds_sorted(cfg: ShardedPQConfig, route_inv, add_keys,
+                       add_vals, add_mask):
+    """Fused router + per-lane sort via resample-amortized grouping.
+
+    ``route_inv`` (stable argsort of the route, refreshed only when the
+    route resamples) lists each lane's slots contiguously; because the
+    route is a permutation of the balanced pattern ``slot % L``, every
+    lane's segment size is STATIC (ceil/floor of W/L), so routing a
+    tick's batch is one gather through static windows — no per-tick
+    grouping sort.  One stable 2-operand ``lax.sort`` then key-sorts all
+    lanes' rows in a single pass.  Within a lane ties keep slot order —
+    bit-identical to routing first and letting each lane stably sort its
+    own batch (what ``jax.vmap(pqueue.tick)`` computes; asserted by
+    tests/test_tick_repairs.py).  Returns per-lane [L, a_lane] arrays
+    ready for ``_tick_head(..., adds_sorted=True)``, plus the dropped
+    count (elements past a lane's quota; zero at slack >= 1).
+    """
+    L, al = cfg.n_lanes, cfg.lane.a_max
+    w = add_keys.shape[0]
+    # static segment geometry of the balanced pattern arange(w) % L
+    cnts = [(w + L - 1 - l) // L for l in range(L)]
+    smax = max(cnts)
+    offs, acc = [], 0
+    for c in cnts:
+        offs.append(acc)
+        acc += c
+    idx = (jnp.asarray(offs, _I32)[:, None]
+           + jnp.arange(smax, dtype=_I32)[None, :])        # [L, smax]
+    pad = jnp.arange(smax, dtype=_I32)[None, :] >= jnp.asarray(cnts,
+                                                               _I32)[:, None]
+    src = route_inv[jnp.clip(idx, 0, w - 1)]               # [L, smax] slots
+    live = ~pad & add_mask[src]
+    ck = jnp.where(live, add_keys[src].astype(_F32), INF)
+    cv = jnp.where(live, add_vals[src].astype(_I32), EMPTY_VAL)
+    su, sv = jax.lax.sort((_to_sortable_u32(ck), cv), num_keys=1,
+                          is_stable=True)
+    sk = _from_sortable_u32(su)
+    n_lane = jnp.sum(live, axis=-1, dtype=_I32)
+    if al >= smax:
+        padw = al - smax
+        lk = jnp.pad(sk, ((0, 0), (0, padw)), constant_values=INF)
+        lv = jnp.pad(sv, ((0, 0), (0, padw)), constant_values=EMPTY_VAL)
+        n_drop = jnp.zeros((), _I32)
+    else:
+        lk, lv = sk[:, :al], sv[:, :al]
+        n_drop = jnp.sum(jnp.maximum(n_lane - al, 0), dtype=_I32)
+    taken = jnp.arange(al, dtype=_I32)[None, :] < jnp.minimum(
+        n_lane, al)[:, None]
+    return lk, lv, taken, n_drop
+
+
+def _alloc_removes(cfg: ShardedPQConfig, lanes: pqueue.PQState, rm_count,
+                   incoming=0):
     """c-relaxed min-of-lane-heads allocation of r removes to L lanes.
 
     Base share r // L each; the r % L remainder goes to the lanes with the
@@ -188,87 +269,208 @@ def _alloc_removes(cfg: ShardedPQConfig, lanes: pqueue.PQState, rm_count):
     which keeps total served = min(r, union size) whenever any single
     reallocation pass suffices (exact for the balanced loads the router
     produces; the property test drives skewed loads too).
+
+    `incoming` is each lane's share of THIS tick's routed adds ([L] or
+    0): a tick serves same-tick adds (elimination, merge prefix,
+    moveHead all do), so a lane's serve capacity is pre-tick size +
+    arrivals.  Clamping to the pre-tick size alone (the old behavior)
+    silently left every lane a standing residue of one batch that could
+    never drain — and kept every lane's combine/scatter/repair passes
+    firing on every steady-state tick.
     """
     L = cfg.n_lanes
     rl = cfg.lane.r_max
-    sizes = lanes.seq_len + lanes.par_count                   # [L]
+    sizes = (lanes.seq_len + lanes.par_count
+             + jnp.asarray(incoming, _I32))                   # [L]
     heads = jnp.where(sizes > 0, lanes.min_value, INF)
     r = jnp.asarray(rm_count, _I32)
     base = r // L
     rem = r % L
-    head_rank = jnp.argsort(jnp.argsort(heads))               # rank by head
+    # rank by (head, lane id) via one [L, L] compare-all — identical to
+    # argsort(argsort(heads)) but sort-free: three tiny sorts plus a
+    # scatter sat on the tick's critical path (grants gate every lane's
+    # head) and cost ~20x more than these L^2 compares
+    i = jnp.arange(L, dtype=_I32)
+    ahead = ((heads[None, :] < heads[:, None])
+             | ((heads[None, :] == heads[:, None])
+                & (i[None, :] < i[:, None])))
+    head_rank = ahead.sum(axis=-1, dtype=_I32)
     want = base + (head_rank < rem).astype(_I32)
     grant = jnp.minimum(jnp.minimum(want, sizes), rl)
     shortfall = r - grant.sum(dtype=_I32)
     # second pass: hand the shortfall to lanes with leftover capacity,
-    # again preferring small heads (water-fill by head order)
+    # again preferring small heads (water-fill by head order); a lane's
+    # fill = whatever shortfall remains after all lanes ranked ahead of
+    # it took their capacity
     cap_left = jnp.minimum(sizes, rl) - grant
-    order = jnp.argsort(heads)
-    cap_sorted = cap_left[order]
-    csum = jnp.cumsum(cap_sorted)
-    extra_sorted = jnp.clip(
-        jnp.minimum(cap_sorted, shortfall - (csum - cap_sorted)), 0, None)
-    extra = jnp.zeros((L,), _I32).at[order].set(extra_sorted.astype(_I32))
-    return grant + extra
+    before = jnp.sum(
+        jnp.where(head_rank[None, :] < head_rank[:, None],
+                  cap_left[None, :], 0), axis=-1, dtype=_I32)
+    extra = jnp.clip(jnp.minimum(cap_left, shortfall - before), 0, None)
+    return grant + extra.astype(_I32)
 
 
 # ---------------------------------------------------------------------------
 # the sharded tick
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=0)
-def tick(cfg: ShardedPQConfig, state: ShardedState, add_keys, add_vals,
-         add_mask, rm_count) -> Tuple[ShardedState, ShardedTickResult]:
-    """One synchronized round over all lanes (route -> vmap tick -> fold).
+def _lanes_tick(lane_cfg, lanes: pqueue.PQState, lk, lv, lm, grants,
+                *, adds_sorted: bool = False):
+    """Fused lane-major tick over L stacked lanes.
 
-    add_keys/add_vals/add_mask: [W] un-sharded op batch; rm_count: scalar.
-    Returns up to rm_count near-minimal (key, val) pairs, compacted into
-    a [max(W, L * lane.r_max)]-wide result (see ShardedTickResult;
-    relaxed semantics — see module docstring).
+    The repair-pass hoist (DESIGN.md §6.1): only the unconditional fast
+    path runs under ``vmap`` (it contains no ``lax.cond``, so nothing is
+    lowered to per-lane selects); each rare repair's predicate is then
+    reduced ACROSS lanes and the repair runs lane-major — all lanes
+    through one batched kernel call — under a single batch-level
+    ``lax.cond`` that fires only when some lane needs it.  Lanes that did
+    not ask for a firing repair keep their state bit-for-bit (per-lane
+    select inside the repair), so the result is bit-identical to
+    ``jax.vmap(pqueue.tick)`` (asserted by tests/test_tick_repairs.py)
+    while a tick with no overflow/shortfall/quiet lane pays none of the
+    flatten/extract/redistribute work ``vmap``'s cond→select lowering
+    used to force on every lane every tick.
     """
+    mid = jax.vmap(
+        lambda s, k, v, m, r: pqueue._tick_head(
+            lane_cfg, s, k, v, m, r, adds_sorted=adds_sorted),
+    )(lanes, lk, lv, lm, grants)
+
+    def _hoisted(pred, pass_fn, m):
+        return jax.lax.cond(jnp.any(pred),
+                            functools.partial(pass_fn, lane_cfg),
+                            lambda x: x, m)
+
+    # combine and scatter are hoisted too: on a drain tick whose batch
+    # fully eliminates, no lane pays the seq_cap+a_max merge or the
+    # bucket append at all.  The conds are NESTED under one outer
+    # "anything to do?" cond, so a fully idle tick crosses a single
+    # pass-through conditional — each cond boundary costs carry-buffer
+    # traffic.  The outer predicate is a sound superset: chopHead needs
+    # new_len > 0 (implies need_combine), rebalance needs a scatter, and
+    # moveHead needs removes past the eliminated prefix plus a nonempty
+    # (pre-tick or incoming) parallel part.
+    def _active(m):
+        m = _hoisted(m.pending.need_combine, pqueue._pass_combine, m)
+        # need_scatter can only be RAISED by the combine pass (spill),
+        # so re-reading it after the combine cond is what makes this
+        # exact
+        m = _hoisted(m.pending.need_scatter, pqueue._pass_scatter, m)
+        m = pqueue._tick_preds(lane_cfg, m)
+
+        p = m.pending
+        for pred, repair in (
+            (p.need_rebal & p.need_move, pqueue._repair_rebal_move),
+            (p.need_rebal & ~p.need_move, pqueue._repair_rebalance),
+            (p.need_move & ~p.need_rebal, pqueue._repair_move),
+            (p.need_chop, pqueue._repair_chop),
+        ):
+            m = _hoisted(pred, repair, m)
+        return m
+
+    p = mid.pending
+    may_move = ((mid.rm_count - mid.n_imm > 0)
+                & (mid.par.par_count + mid.n_par_adds > 0))
+    mid = jax.lax.cond(
+        jnp.any(p.need_combine | p.need_scatter | may_move),
+        _active, functools.partial(pqueue._tick_preds, lane_cfg), mid)
+    state, res = pqueue._tick_finish(lane_cfg, mid)
+    # per-lane served counts from the carry's counters (the removed
+    # stream is a dense prefix per lane) — no array reduction needed
+    n_lane = mid.pending.move_off + mid.n_rm_par
+    return state, res, n_lane
+
+
+def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
+               add_vals, add_mask,
+               rm_count) -> Tuple[ShardedState, ShardedTickResult]:
     L = cfg.n_lanes
     w = add_keys.shape[0]
     rl = cfg.lane.r_max
     rm_count = jnp.asarray(rm_count, _I32)
 
-    # -- stick-random router refresh --
+    # -- stick-random router refresh: the PRNG split, the permutation,
+    # AND its stable inverse (the lane-grouped slot list) are all built
+    # only under the resample branch.  The old code paid an
+    # unconditional _fresh_route (a discarded [W] permutation 7 of
+    # every 8 ticks at stick=8) and an unconditional jax.random.split —
+    # whose threefry while-loops alone were a measurable per-tick cost
+    # on CPU.  The rng therefore advances only on resample ticks. --
     resample = (state.tick_idx % cfg.stick) == 0
-    key, sub = jax.random.split(state.rng)
-    fresh = _fresh_route(sub, w, L)
-    route = jnp.where(resample, fresh, state.route)
 
-    lk, lv, lm, n_drop = _route_adds(cfg, route, add_keys, add_vals,
-                                     add_mask)
-    grants = _alloc_removes(cfg, state.lanes, rm_count)       # [L]
+    def _resample(k):
+        k2, sub = jax.random.split(k)
+        fresh = _fresh_route(sub, w, L)
+        return k2, fresh, jnp.argsort(fresh, stable=True).astype(_I32)
 
-    lanes, res = jax.vmap(
-        lambda s, k, v, m, r: pqueue.tick(cfg.lane, s, k, v, m, r),
-    )(state.lanes, lk, lv, lm, grants)
+    key, route, route_inv = jax.lax.cond(
+        resample, _resample,
+        lambda k: (k, state.route, state.route_inv), state.rng)
+
+    lk, lv, lm, n_drop = _route_adds_sorted(cfg, route_inv, add_keys,
+                                            add_vals, add_mask)
+    grants = _alloc_removes(cfg, state.lanes, rm_count,
+                            incoming=lm.sum(axis=-1, dtype=_I32))  # [L]
+
+    lanes, res, n_lane = _lanes_tick(cfg.lane, state.lanes, lk, lv, lm,
+                                     grants, adds_sorted=True)
 
     # -- fold lane results into one compacted stream (no global sort:
-    # callers of a relaxed queue get a near-min *set*, not an order) --
-    served = res.rm_served.reshape(-1)                        # [L*rl]
-    fk = jnp.where(served, res.rm_keys.reshape(-1), INF)
-    fv = jnp.where(served, res.rm_vals.reshape(-1), EMPTY_VAL)
-    pos = jnp.cumsum(served.astype(_I32)) - 1
-    n_served = served.sum(dtype=_I32)
+    # callers of a relaxed queue get a near-min *set*, not an order).
+    # Every lane serves a PREFIX of its result row (the removed stream
+    # is [imm elim | merged prefix | moveHead prefix], each segment
+    # dense), so compaction is ragged-segment arithmetic over the lane
+    # counts — a [out_w, L] compare-all instead of an [out_w, L*rl]
+    # searchsorted scan --
+    cum = jnp.cumsum(n_lane)
+    offs = cum - n_lane
+    n_served = cum[L - 1]
     out_w = max(w, cfg.n_lanes * rl)
-    # gather: output slot j takes the j-th served element
-    idx = jnp.searchsorted(pos, jnp.arange(out_w, dtype=_I32),
-                           side="left").astype(_I32)
-    idx = jnp.clip(idx, 0, L * rl - 1)
-    got = jnp.arange(out_w, dtype=_I32) < n_served
-    rm_keys = jnp.where(got, fk[idx], INF)
-    rm_vals = jnp.where(got, fv[idx], EMPTY_VAL)
+    j = jnp.arange(out_w, dtype=_I32)
+    row = jnp.clip(kops.searchsorted_last(cum, j, side="right"),
+                   0, L - 1)
+    col = jnp.clip(j - offs[row], 0, rl - 1)
+    got = j < n_served
+    flat = row * rl + col
+    rm_keys = jnp.where(got, res.rm_keys.reshape(-1)[flat], INF)
+    rm_vals = jnp.where(got, res.rm_vals.reshape(-1)[flat], EMPTY_VAL)
 
     new_state = ShardedState(
         lanes=lanes,
         rng=key,
         route=route,
+        route_inv=route_inv,
         tick_idx=state.tick_idx + 1,
         n_router_dropped=state.n_router_dropped + n_drop,
     )
     return new_state, ShardedTickResult(rm_keys, rm_vals, got)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def tick(cfg: ShardedPQConfig, state: ShardedState, add_keys, add_vals,
+         add_mask, rm_count) -> Tuple[ShardedState, ShardedTickResult]:
+    """One synchronized round over all lanes (route -> fused lane-major
+    tick -> fold).
+
+    add_keys/add_vals/add_mask: [W] un-sharded op batch; rm_count: scalar.
+    `state` is DONATED — do not touch the argument after the call.
+    Returns up to rm_count near-minimal (key, val) pairs, compacted into
+    a [max(W, L * lane.r_max)]-wide result (see ShardedTickResult;
+    relaxed semantics — see module docstring).
+    """
+    return _tick_impl(cfg, state, add_keys, add_vals, add_mask, rm_count)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def tick_n(cfg: ShardedPQConfig, state: ShardedState, add_keys, add_vals,
+           add_mask, rm_counts) -> Tuple[ShardedState, ShardedTickResult]:
+    """`lax.scan` multi-tick driver over [T, ...]-stacked op batches;
+    `state` is DONATED.  One dispatch for T synchronized rounds."""
+    def body(s, xs):
+        return _tick_impl(cfg, s, *xs)
+
+    return jax.lax.scan(body, state,
+                        (add_keys, add_vals, add_mask, rm_counts))
 
 
 # ---------------------------------------------------------------------------

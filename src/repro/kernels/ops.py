@@ -12,13 +12,16 @@ Backend selection:
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bitonic import bitonic_sort_kvf
 from repro.kernels.merge_consume import merge_sorted_kvf
-from repro.kernels.radix_select import radix_select_threshold
+from repro.kernels.radix_select import (_to_sortable_u32,
+                                        radix_select_threshold)
 
 INF = jnp.inf
 _I32 = jnp.int32
@@ -67,18 +70,82 @@ def _check_val_bound(*val_arrays) -> None:
                 "the f32 one-hot matmul path (see merge_consume.py)")
 
 
+def searchsorted_last(a, v, side: str = "left"):
+    """Batched ``searchsorted`` along the last axis.
+
+    ``a``: [..., n] rows sorted ascending; ``v``: [..., m] queries; equal
+    (or broadcastable) leading dims.  Returns i32 insertion points in
+    [0, n].  Delegates to ``jnp.searchsorted``'s scan method — measured
+    fastest on XLA CPU both 1D and batched (a hand-rolled binary-lift
+    gather loop ran 10x slower: per-round ``take_along_axis`` gathers do
+    not fuse, while the scan method's compare rounds do).  Leading dims
+    ride a ``jax.vmap`` of the scan, which lowers to one batched scan —
+    NOT one program per lane — so this is safe in lane-major kernels and
+    under further ``vmap``.
+    """
+    n, m = a.shape[-1], v.shape[-1]
+    lead = jnp.broadcast_shapes(a.shape[:-1], v.shape[:-1])
+    rows = 1
+    for d in lead:
+        rows *= d
+    if rows * n * m <= (1 << 17):
+        # compare-all: one broadcast compare + reduce instead of a
+        # log2(n)-round sequential scan.  Inside a lax.scan body every
+        # while-round is a latency-bound micro-op, so for small n*m one
+        # wide op wins by a large margin (and lowers identically under
+        # vmap).  Exact: pos = #{a < v} (left) or #{a <= v} (right).
+        # The threshold is conservative — visible shapes may carry a
+        # hidden vmap batch factor that multiplies the real work.
+        cmp = (a[..., None, :] < v[..., :, None] if side == "left"
+               else a[..., None, :] <= v[..., :, None])
+        return jnp.sum(cmp, axis=-1, dtype=_I32)
+    # larger shapes: the binary-search scan's rounds already do rows*m
+    # of work each, so they are throughput- not latency-bound and the
+    # m log n total beats any compare-all (a two-level blocked search
+    # was also tried and measured ~4x slower at the merge shapes)
+    if a.ndim == 1 and v.ndim == 1:
+        return jnp.searchsorted(a, v, side=side).astype(_I32)
+    af = jnp.broadcast_to(a, lead + (n,)).reshape(-1, n)
+    vf = jnp.broadcast_to(v, lead + (m,)).reshape(-1, m)
+    out = jax.vmap(
+        lambda ar, vr: jnp.searchsorted(ar, vr, side=side))(af, vf)
+    return out.reshape(lead + (m,)).astype(_I32)
+
+
+def argsort_f32_last(keys, *, stable: bool = True):
+    """argsort float rows along the last axis via the monotone
+    float→uint32 transform (radix_select's map: total order preserved,
+    INF sorts last).  XLA CPU's float sort comparator (NaN-aware total
+    order) runs ~4x slower than the integer sort; the u32 map is
+    bijective, so equal keys are equal u32s and stability carries over.
+    Keys must be NaN-free (the PQ uses INF padding, never NaN).  Only
+    observable difference: -0.0 orders strictly before 0.0 instead of
+    tying — a tie permutation under float comparison, inside the PQ's
+    multiset contract for equal keys.
+    """
+    return jnp.argsort(_to_sortable_u32(keys), axis=-1, stable=stable)
+
+
 def sort_kvf(keys, vals, flags, *, backend: str = "auto"):
-    """Co-sort (keys, vals, flags) by key ascending. 1D or [rows, n]."""
+    """Co-sort (keys, vals, flags) by key ascending along the last axis.
+
+    Accepts any leading dims ([n], [rows, n], [lanes, rows, n], ...);
+    the pallas path flattens the leading dims onto the bitonic kernel's
+    rows grid (lane-major, not vmapped one lane at a time).
+    """
     if _resolve(backend) == "jnp":
-        return ref.ref_sort_kvf(keys, vals, flags)
-    squeeze = keys.ndim == 1
-    if squeeze:
-        keys, vals, flags = keys[None], vals[None], flags[None]
-    ok, ov, of = bitonic_sort_kvf(keys, vals.astype(_I32),
-                                  flags.astype(_I32), interpret=_interpret())
-    if squeeze:
-        ok, ov, of = ok[0], ov[0], of[0]
-    return ok, ov, of
+        order = argsort_f32_last(keys)
+        return (jnp.take_along_axis(keys, order, axis=-1),
+                jnp.take_along_axis(vals, order, axis=-1),
+                jnp.take_along_axis(flags, order, axis=-1))
+    lead = keys.shape[:-1]
+    n = keys.shape[-1]
+    ok, ov, of = bitonic_sort_kvf(keys.reshape(-1, n),
+                                  vals.astype(_I32).reshape(-1, n),
+                                  flags.astype(_I32).reshape(-1, n),
+                                  interpret=_interpret())
+    return (ok.reshape(lead + (n,)), ov.reshape(lead + (n,)),
+            of.reshape(lead + (n,)))
 
 
 def _merge_sorted_corank(ak, av, af, bk, bv, bf):
@@ -88,18 +155,26 @@ def _merge_sorted_corank(ak, av, af, bk, bv, bf):
     searchsorted + gathers instead of position scatters: XLA CPU
     serializes scatters, and even an argsort of the concatenation beats
     them; co-rank gathers beat both (~1.8x over the argsort at 16k+4k).
+    Supports any equal leading dims (lane-major merges in the sharded
+    tick's repair passes run all lanes through one call).
     """
-    n, m = ak.shape[0], bk.shape[0]
-    pa = jnp.arange(n, dtype=_I32) + jnp.searchsorted(
-        bk, ak, side="left").astype(_I32)
-    j = jnp.arange(n + m, dtype=_I32)
-    na = jnp.searchsorted(pa, j, side="right").astype(_I32)
+    n, m = ak.shape[-1], bk.shape[-1]
+    lead = ak.shape[:-1]
+    pa = (jnp.arange(n, dtype=_I32)
+          + searchsorted_last(bk, ak, side="left"))      # [..., n] ascending
+    j = jnp.broadcast_to(jnp.arange(n + m, dtype=_I32), lead + (n + m,))
+    na = searchsorted_last(pa, j, side="right")
     ia = jnp.clip(na - 1, 0, n - 1)
-    from_a = pa[ia] == j
-    ib = jnp.clip(j - na, 0, m - 1)
-    ok = jnp.where(from_a, ak[ia], bk[ib])
-    ov = jnp.where(from_a, av[ia], bv[ib])
-    of = jnp.where(from_a, af[ia], bf[ib])
+    from_a = jnp.take_along_axis(pa, ia, axis=-1) == j
+    # one fused source index into the concatenation, then one gather per
+    # payload: a where() over six separate gathers kept XLA CPU from
+    # fusing them cleanly (~4x slower measured at [8, 2050+1024])
+    src = jnp.where(from_a, ia, n + jnp.clip(j - na, 0, m - 1))
+    cat = lambda x, y: jnp.broadcast_to(             # noqa: E731
+        jnp.concatenate([x, y], axis=-1), lead + (n + m,))
+    ok = jnp.take_along_axis(cat(ak, bk), src, axis=-1)
+    ov = jnp.take_along_axis(cat(av, bv), src, axis=-1)
+    of = jnp.take_along_axis(cat(af, bf), src, axis=-1)
     return ok, ov, of
 
 
@@ -107,15 +182,18 @@ def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
                  backend: str = "auto"):
     """Merge two sorted INF-padded streams; ties resolve a-first.
 
-    Pallas path: payloads ride a f32 matmul, so |val| must be < 2**24
-    (validated here for concrete inputs), and n+m must be even (the output
-    is tiled; the tile shrinks to the largest power-of-two divisor, and an
-    odd total has none).
+    Accepts any equal leading dims (lane-major).  Pallas path: payloads
+    ride a f32 matmul, so |val| must be < 2**24 (validated here for
+    concrete inputs), and n+m must be even (the output is tiled; the tile
+    shrinks to the largest power-of-two divisor, and an odd total has
+    none); leading dims map onto the kernel grid via ``jax.vmap`` of the
+    ``pallas_call`` (one compiled program, grid-prefixed — not one lane
+    at a time).
     """
     if _resolve(backend) == "jnp":
         return _merge_sorted_corank(ak, av, af, bk, bv, bf)
     _check_val_bound(av, bv)
-    total = ak.shape[0] + bk.shape[0]
+    total = ak.shape[-1] + bk.shape[-1]
     if total % 2:
         # an odd total has no power-of-two tiling: the shrink loop below
         # would previously divide tile to 0 and ZeroDivisionError out
@@ -125,9 +203,18 @@ def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
             f"backend='jnp'.")
     while total % tile:
         tile = max(tile // 2, 1)
-    return merge_sorted_kvf(ak, av.astype(_I32), af.astype(_I32),
-                            bk, bv.astype(_I32), bf.astype(_I32),
-                            tile=tile, interpret=_interpret())
+    kern = lambda *xs: merge_sorted_kvf(*xs, tile=tile,      # noqa: E731
+                                        interpret=_interpret())
+    lead = ak.shape[:-1]
+    args = (ak, av.astype(_I32), af.astype(_I32),
+            bk, bv.astype(_I32), bf.astype(_I32))
+    if lead:
+        args = tuple(x.reshape((-1,) + x.shape[len(lead):]) for x in args)
+        ok, ov, of = jax.vmap(kern)(*args)
+        return (ok.reshape(lead + ok.shape[1:]),
+                ov.reshape(lead + ov.shape[1:]),
+                of.reshape(lead + of.shape[1:]))
+    return kern(*args)
 
 
 def select_threshold(keys, k, *, backend: str = "auto"):
@@ -173,27 +260,36 @@ def sorted_runs_gather(keys2d, vals2d, counts, out_len: int):
     rows); because bucket key ranges are disjoint and ordered, each
     sorted run is a contiguous block of global ranks starting at the
     cumulative count offset, so output rank j gathers from the run that
-    contains it.  Returns (out_k INF-padded, out_v -1-padded, rk, rv)
-    where rk/rv are the row-sorted store (reused by callers that also
-    need per-row windows, e.g. extraction's survivor shift).
+    contains it.  Accepts any leading dims ([..., NB, BCAP] store,
+    [..., NB] counts): the sharded queue's repair passes run all lanes
+    through one lane-major call.  Returns (out_k INF-padded, out_v
+    -1-padded, rk, rv) where rk/rv are the row-sorted store (reused by
+    callers that also need per-row windows, e.g. extraction's survivor
+    shift).
     """
-    nb, bc = keys2d.shape
-    slot = jnp.arange(bc, dtype=_I32)[None, :]
-    live = slot < counts[:, None]
+    nb, bc = keys2d.shape[-2:]
+    lead = keys2d.shape[:-2]
+    slot = jnp.arange(bc, dtype=_I32)
+    live = slot < counts[..., None]
     mk = jnp.where(live, keys2d, INF)
     mv = jnp.where(live, vals2d, -1).astype(_I32)
-    order = jnp.argsort(mk, axis=-1)
+    order = argsort_f32_last(mk)
     rk = jnp.take_along_axis(mk, order, axis=-1)
     rv = jnp.take_along_axis(mv, order, axis=-1)
-    cum = jnp.cumsum(counts)
+    cum = jnp.cumsum(counts, axis=-1)
     offs = cum - counts
-    j = jnp.arange(out_len, dtype=_I32)
-    row = jnp.clip(jnp.searchsorted(cum, j, side="right"), 0,
-                   nb - 1).astype(_I32)
-    col = jnp.clip(j - offs[row], 0, bc - 1)
-    in_run = j < cum[nb - 1]
-    out_k = jnp.where(in_run, rk[row, col], INF)
-    out_v = jnp.where(in_run, rv[row, col], -1)
+    j = jnp.broadcast_to(jnp.arange(out_len, dtype=_I32),
+                         lead + (out_len,))
+    row = jnp.clip(searchsorted_last(cum, j, side="right"), 0, nb - 1)
+    col = jnp.clip(j - jnp.take_along_axis(offs, row, axis=-1), 0, bc - 1)
+    in_run = j < cum[..., nb - 1:nb]
+    flat_idx = row * bc + col
+    out_k = jnp.where(in_run,
+                      jnp.take_along_axis(rk.reshape(lead + (nb * bc,)),
+                                          flat_idx, axis=-1), INF)
+    out_v = jnp.where(in_run,
+                      jnp.take_along_axis(rv.reshape(lead + (nb * bc,)),
+                                          flat_idx, axis=-1), -1)
     return out_k, out_v, rk, rv
 
 
@@ -245,26 +341,32 @@ def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
     Returns (out_k [k_max] sorted ascending INF-padded, out_v [k_max]
     payloads (-1 padded), new_keys2d, new_vals2d, new_counts) — the new
     store holds exactly the unselected survivors, ranges preserved.
+
+    Leading dims: the jnp path accepts [..., NB, BCAP] stores with a
+    per-lane k [...] (lane-major, one call for all lanes); the pallas
+    path maps extra leading dims onto the kernel grid via ``jax.vmap``
+    of the ``pallas_call``.
     """
-    nb, bc = keys2d.shape
-    slot = jnp.arange(bc, dtype=_I32)[None, :]
-    live = slot < counts[:, None]
-    total = counts.sum(dtype=_I32)
+    nb, bc = keys2d.shape[-2:]
+    lead = keys2d.shape[:-2]
+    slot = jnp.arange(bc, dtype=_I32)
+    live = slot < counts[..., None]
+    total = counts.sum(axis=-1, dtype=_I32)
     k = jnp.minimum(jnp.minimum(jnp.asarray(k, _I32), total), k_max)
 
     if _resolve(backend) == "jnp":
         out_k, out_v, rk, rv = sorted_runs_gather(keys2d, vals2d, counts,
                                                   k_max)
         j = jnp.arange(k_max, dtype=_I32)
-        out_k = jnp.where(j < k, out_k, INF)
-        out_v = jnp.where(j < k, out_v, -1)
+        out_k = jnp.where(j < k[..., None], out_k, INF)
+        out_v = jnp.where(j < k[..., None], out_v, -1)
         # deletion: the selected elements are each run's prefix of length
         # clip(k - start, 0, count); survivors = run suffix, shifted left
-        offs = jnp.cumsum(counts) - counts           # run start ranks
-        nsel = jnp.clip(k - offs, 0, counts).astype(_I32)
+        offs = jnp.cumsum(counts, axis=-1) - counts   # run start ranks
+        nsel = jnp.clip(k[..., None] - offs, 0, counts).astype(_I32)
         new_counts = counts - nsel
-        keep = slot < new_counts[:, None]
-        src = jnp.clip(slot + nsel[:, None], 0, bc - 1)
+        keep = slot < new_counts[..., None]
+        src = jnp.clip(slot + nsel[..., None], 0, bc - 1)
         new_k = jnp.where(keep, jnp.take_along_axis(rk, src, axis=-1), INF)
         new_v = jnp.where(keep, jnp.take_along_axis(rv, src, axis=-1), -1)
         return out_k, out_v, new_k, new_v, new_counts
@@ -272,6 +374,26 @@ def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
     if k_max & (k_max - 1):
         raise ValueError(f"pallas extract_k_bucketed needs pow2 k_max, "
                          f"got {k_max}")
+    if lead:
+        fn = functools.partial(_extract_k_bucketed_pallas_1, k_max=k_max)
+        flat = lambda x: x.reshape((-1,) + x.shape[len(lead):])  # noqa: E731
+        if splitters is None:
+            outs = jax.vmap(lambda a, b, c, d: fn(a, b, c, d, None))(
+                flat(keys2d), flat(vals2d), flat(counts), flat(k))
+        else:
+            outs = jax.vmap(fn)(flat(keys2d), flat(vals2d), flat(counts),
+                                flat(k), flat(splitters))
+        return tuple(o.reshape(lead + o.shape[1:]) for o in outs)
+    return _extract_k_bucketed_pallas_1(keys2d, vals2d, counts, k,
+                                        splitters, k_max=k_max)
+
+
+def _extract_k_bucketed_pallas_1(keys2d, vals2d, counts, k, splitters, *,
+                                 k_max: int):
+    """Single-store pallas extraction body (see extract_k_bucketed)."""
+    nb, bc = keys2d.shape
+    slot = jnp.arange(bc, dtype=_I32)[None, :]
+    live = slot < counts[:, None]
     mk = jnp.where(live, keys2d, INF)
     mv = jnp.where(live, vals2d, -1).astype(_I32)
     if splitters is not None:

@@ -312,3 +312,67 @@ def test_tick_pallas_backend_matches_oracle():
             [k for k, _ in ref_pq.tick(keys.tolist(), range(n_add), n_rm)
              if k != np.inf], np.float32))
         np.testing.assert_allclose(got, exp)
+
+
+# ---------------------------------------------------------------------------
+# batched search / sort helpers behind the lane-major hot paths
+# ---------------------------------------------------------------------------
+
+def test_searchsorted_last_matches_numpy():
+    """Exactness across sides, ties, INF padding, int dtypes, and leading
+    dims — both the compare-all and the scan lowering."""
+    rng = np.random.default_rng(12)
+    for trial in range(60):
+        n = int(rng.integers(1, 400))
+        m = int(rng.integers(1, 300))
+        lead = () if trial % 3 == 0 else (int(rng.integers(1, 5)),)
+        if trial % 4 == 0:
+            a = np.sort(rng.integers(0, 25, lead + (n,)).astype(np.int32),
+                        axis=-1)
+            v = rng.integers(-3, 30, lead + (m,)).astype(np.int32)
+        else:
+            pool = np.array([0.0, 0.5, 1.5, 2.5, np.inf], np.float32)
+            a = np.sort(rng.choice(pool, lead + (n,)), axis=-1)
+            v = rng.choice(np.append(pool, [-1.0, 3.0]), lead + (m,))
+        for side in ("left", "right"):
+            got = np.asarray(ops.searchsorted_last(
+                jnp.asarray(a), jnp.asarray(v), side=side))
+            exp = np.stack([
+                np.searchsorted(ar, vr, side=side)
+                for ar, vr in zip(a.reshape(-1, n), v.reshape(-1, m))
+            ]).reshape(lead + (m,))
+            np.testing.assert_array_equal(got, exp)
+
+
+def test_argsort_f32_last_matches_stable_float_argsort():
+    rng = np.random.default_rng(3)
+    keys = rng.choice([0.0, 1.5, 2.5, np.inf, -4.0, 1e30],
+                      (6, 257)).astype(np.float32)
+    got = np.asarray(ops.argsort_f32_last(jnp.asarray(keys)))
+    exp = np.argsort(keys, axis=-1, kind="stable")
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_sorted_runs_gather_lane_major_matches_per_lane():
+    rng = np.random.default_rng(8)
+    L, nb, bc = 3, 4, 8
+    keys = np.full((L, nb, bc), np.inf, np.float32)
+    vals = np.full((L, nb, bc), -1, np.int32)
+    counts = rng.integers(0, bc + 1, (L, nb)).astype(np.int32)
+    for lane in range(L):
+        base = 0.0
+        for b in range(nb):
+            c = counts[lane, b]
+            keys[lane, b, :c] = np.sort(
+                rng.uniform(base, base + 10, c)).astype(np.float32)
+            vals[lane, b, :c] = rng.integers(0, 99, c)
+            base += 10.0
+    outs = ops.sorted_runs_gather(jnp.asarray(keys), jnp.asarray(vals),
+                                  jnp.asarray(counts), 16)
+    for lane in range(L):
+        one = ops.sorted_runs_gather(jnp.asarray(keys[lane]),
+                                     jnp.asarray(vals[lane]),
+                                     jnp.asarray(counts[lane]), 16)
+        for batched, single in zip(outs, one):
+            np.testing.assert_array_equal(np.asarray(batched)[lane],
+                                          np.asarray(single))

@@ -7,6 +7,7 @@ paper's linearizability argument, checked for pqe and both baselines.
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -227,7 +228,9 @@ def test_elimination_stats_balanced_mix():
         mask[:] = True
         state, _ = tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
                         jnp.asarray(mask), jnp.asarray(0))
-    base = state.stats
+    # tick() donates its state argument: snapshot the counters as host
+    # ints, a live reference would die with the donated buffers
+    base = jax.tree.map(int, state.stats)
     for t in range(50):
         n = cfg.a_max // 2
         ak = np.full((cfg.a_max,), np.inf, np.float32)
