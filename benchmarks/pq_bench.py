@@ -56,12 +56,17 @@ TICK_N = {
 }
 
 
-def make_impl_cfg(impl: str, width: int, *, lanes: int = DEFAULT_LANES):
+def make_impl_cfg(impl: str, width: int, *, lanes: int = DEFAULT_LANES,
+                  preroute: str = "adaptive"):
     """Per-impl config: the sharded queue wraps the width-`width` base
-    config into `lanes` vmapped lanes (MultiQueues axis)."""
+    config into `lanes` vmapped lanes (MultiQueues axis).  `preroute`
+    selects the sharded queue's pre-route elimination gate
+    (adaptive|on|off) — the bench grid measures "off" as the disabled
+    comparison point."""
     base = make_cfg(width)
     if impl == "sharded":
-        return shq.make_sharded_cfg(width, lanes, base=base)
+        return shq.make_sharded_cfg(width, lanes, base=base,
+                                    preroute=preroute)
     return base
 
 
@@ -82,7 +87,7 @@ def _warm(cfg, impl_init, impl_tick, rng):
 
 def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
               seed: int = 0, key_dist: str = "uniform",
-              lanes: int = DEFAULT_LANES,
+              lanes: int = DEFAULT_LANES, preroute: str = "adaptive",
               scan: bool = True) -> Dict[str, float]:
     """Throughput of one implementation at one width and add-fraction.
 
@@ -93,14 +98,15 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
         cluster just above the current minimum, the paper's motivating
         scheduler workload, where elimination thrives.
 
-    `lanes` only affects impl="sharded" (relaxed semantics: its removes
-    are near-minimal, not exact — see repro.core.sharded).  `scan=True`
-    drives impls that provide a `tick_n` scan driver (TICK_N) with one
-    dispatch for the whole run; others fall back to the eager loop.
+    `lanes`/`preroute` only affect impl="sharded" (relaxed semantics:
+    its removes are near-minimal, not exact — see repro.core.sharded).
+    `scan=True` drives impls that provide a `tick_n` scan driver
+    (TICK_N) with one dispatch for the whole run; others fall back to
+    the eager loop.
 
     Returns {us_per_tick, mops_per_s, ...stats}.
     """
-    cfg = make_impl_cfg(impl, width, lanes=lanes)
+    cfg = make_impl_cfg(impl, width, lanes=lanes, preroute=preroute)
     impl_init, impl_tick = IMPLS[impl]
     rng = np.random.default_rng(seed)
     state = _warm(cfg, impl_init, impl_tick, rng)
@@ -161,6 +167,17 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
                   "rm_seq", "rm_par", "rm_empty", "n_movehead",
                   "n_chophead", "n_removes"):
             out[k] = int(getattr(s, k))
+    elif impl == "sharded":
+        st = shq.stats(state)
+        out["preroute_elim"] = int(st.n_preroute_elim)
+        out["preroute_ticks"] = int(st.n_preroute_ticks)
+        out["preroute_hit_per_tick"] = (int(st.n_preroute_elim)
+                                        / max(int(st.n_ticks), 1))
+        out["elim_ema"] = float(st.elim_ema)
+        out["balance_ema"] = float(st.balance_ema)
+        out["lane_add_elim"] = int(st.lane.add_imm_elim
+                                   + st.lane.add_upc_elim)
+        out["lane_rm_served"] = int(st.lane.rm_seq + st.lane.rm_par)
     return out
 
 

@@ -201,18 +201,45 @@ def bench_straggler() -> None:
           f"speedup_vs_static={r['speedup']:.2f}x|ideal={r['ideal']:.2f}")
 
 
-def bench_smoke_json(out_path: str = "BENCH_pq.json") -> None:
-    """CI perf-trajectory smoke: per-impl us_per_tick at widths {256, 4096}.
+#: workload grid of the smoke bench: the single PR-2 cell (p_add=0.3,
+#: "des") could not OBSERVE elimination wins — the paper's headline is
+#: balanced mixes.  p_add sweeps under/at/over balance; key_dist pits
+#: the elimination-friendly hold model ("des") against uniform keys.
+SMOKE_GRID = tuple((p, d) for d in ("des", "uniform")
+                   for p in (0.3, 0.5, 0.7))
+SMOKE_GRID_WIDTH = 4096
 
-    The moveHead-heavy cell (p_add=0.3, "des" keys) is the sortless-hot-
-    path acceptance workload; BENCH_pq.json is committed so successive
-    PRs can diff the trajectory.  The sharded impl reports a lane-
-    scaling sweep — L ∈ {1, 2, 4, 8} at w4096, {2, 8} at w256 (relaxed
-    semantics — not comparable 1:1 on exactness, only on throughput).
-    Each cell is the best of three runs: shared boxes showed up to 4x
-    ambient inflation run-to-run, and the min is the standard
-    noise-robust timing statistic.
-    `scripts/check_bench_regression.py` gates CI on these numbers.
+
+def _grid_cell_name(width: int, p_add: float, key_dist: str) -> str:
+    return f"w{width}_p{int(round(p_add * 100))}_{key_dist}"
+
+
+def bench_smoke_json(out_path: str = "BENCH_pq.json",
+                     merge_min: str = None) -> None:
+    """CI perf-trajectory smoke: legacy width cells + a workload grid.
+
+    Two cell families, each gated per cell by
+    `scripts/check_bench_regression.py` (machine-normalized within the
+    cell, never across cells):
+
+    * legacy "w256"/"w4096" cells — the moveHead-heavy p_add=0.3 "des"
+      mix over every impl incl. the sharded lane sweep (L ∈ {1,2,4,8}
+      at w4096, {2,8} at w256); kept verbatim so the PR-over-PR
+      trajectory stays diffable back to the seed;
+    * the workload GRID at w4096 — p_add ∈ {0.3, 0.5, 0.7} ×
+      key_dist ∈ {des, uniform} for `pqe`, `sharded_L8`, and
+      `sharded_L8_noelim` (pre-route elimination forced off), so the
+      balanced-mix elimination win — the paper's headline — is a
+      measured, regression-gated number instead of a claim.
+
+    Each cell entry is the best of three runs: shared boxes showed up
+    to 4x ambient inflation run-to-run, and the min is the standard
+    noise-robust timing statistic.  ``merge_min`` (CLI: ``--merge-min
+    PREV.json``) folds a previous result file in elementwise-min —
+    this is how the COMMITTED baseline is built (several full smoke
+    runs merged), since even min-of-3 single runs swing ~2x ambient;
+    the stat field records "min_of_3_merged" so the provenance is
+    visible.
     """
     from benchmarks.pq_bench import IMPLS, bench_mix
     results = {}
@@ -237,20 +264,78 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json") -> None:
         results[f"w{width}"] = cell
         for name, us in cell.items():
             _emit(f"smoke_{name}_w{width}", us, "us_per_tick")
+
+    grid_variants = (
+        ("pqe", dict()),
+        ("sharded_L8", dict(lanes=8, preroute="adaptive")),
+        ("sharded_L8_noelim", dict(lanes=8, preroute="off")),
+    )
+    hit_rates = {}
+    for p_add, key_dist in SMOKE_GRID:
+        cell = {}
+        cname = _grid_cell_name(SMOKE_GRID_WIDTH, p_add, key_dist)
+        for name, kw in grid_variants:
+            impl = "sharded" if name.startswith("sharded") else name
+            runs = [bench_mix(impl, SMOKE_GRID_WIDTH, p_add, ticks=20,
+                              key_dist=key_dist, **kw)
+                    for _ in range(3)]
+            best = min(runs, key=lambda r: r["us_per_tick"])
+            cell[name] = round(best["us_per_tick"], 2)
+            if name == "sharded_L8":
+                # hit rate from the SAME run the recorded time came from
+                hit_rates[cname] = round(best["preroute_hit_per_tick"], 1)
+        results[cname] = cell
+        for name, us in cell.items():
+            _emit(f"smoke_{name}_{cname}", us, "us_per_tick")
+
     payload = {
-        "workload": {"p_add": 0.3, "key_dist": "des", "ticks": 20,
-                     "metric": "us_per_tick", "stat": "min_of_3",
-                     "driver": "tick_n_scan_for_pqe_and_sharded"},
-        # pre-sortless-hot-paths pqe on this workload, measured PAIRED
-        # (interleaved with the PR-1 code under identical load): median
-        # of 3 rounds, jnp backend, CPU — the trajectory's anchor point
+        "workload": {
+            "legacy_cells": {"p_add": 0.3, "key_dist": "des"},
+            "grid": {"width": SMOKE_GRID_WIDTH,
+                     "p_add": [0.3, 0.5, 0.7],
+                     "key_dist": ["des", "uniform"],
+                     "impls": [n for n, _ in grid_variants]},
+            "ticks": 20, "metric": "us_per_tick", "stat": "min_of_3",
+            "driver": "tick_n_scan_for_pqe_and_sharded"},
+        # trajectory anchors: seed/PR-1/PR-2 numbers on the p_add=0.3
+        # "des" w4096 cell (each measured on its own PR's machine; the
+        # regression gate compares machine-normalized shares, not these
+        # absolute values)
         "seed_reference": {"pqe_w4096": 21395.0,
                            "pqe_w4096_paired_new": 7805.5,
                            "paired_speedup": 2.74,
                            "pr1_pqe_w4096": 6470.69,
-                           "pr1_sharded_L8_w4096": 20521.21},
+                           "pr1_sharded_L8_w4096": 20521.21,
+                           "pr2_pqe_w4096": 3447.88,
+                           "pr2_sharded_L8_w4096": 1838.31},
+        "preroute_hit_per_tick": hit_rates,
         "results": results,
     }
+    if merge_min:
+        prev_all = json.loads(Path(merge_min).read_text())
+        prev = prev_all["results"]
+        prev_hits = prev_all.get("preroute_hit_per_tick", {})
+        for cname, cell in payload["results"].items():
+            for impl in cell:
+                pv = prev.get(cname, {}).get(impl, float("inf"))
+                if pv < cell[impl]:
+                    cell[impl] = round(pv, 2)
+                    # keep the hit rate paired with the run whose time
+                    # is being recorded
+                    if impl == "sharded_L8" and cname in prev_hits:
+                        payload["preroute_hit_per_tick"][cname] = (
+                            prev_hits[cname])
+        payload["workload"]["stat"] = "min_of_3_merged"
+    # the headline elimination-win ratios are computed AFTER any merge,
+    # from exactly the values being written — the log must never quote
+    # a ratio the committed artifact does not support
+    for p_add, key_dist in SMOKE_GRID:
+        cname = _grid_cell_name(SMOKE_GRID_WIDTH, p_add, key_dist)
+        cell = payload["results"][cname]
+        _emit(f"smoke_elim_win_{cname}", 0.0,
+              f"noelim/elim="
+              f"{cell['sharded_L8_noelim'] / cell['sharded_L8']:.2f}x"
+              f"|hit_per_tick={payload['preroute_hit_per_tick'][cname]}")
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {out_path}")
 
@@ -262,7 +347,10 @@ def main() -> None:
         out = "BENCH_pq.json"
         if "--out" in sys.argv:
             out = sys.argv[sys.argv.index("--out") + 1]
-        bench_smoke_json(out)
+        merge = None
+        if "--merge-min" in sys.argv:
+            merge = sys.argv[sys.argv.index("--merge-min") + 1]
+        bench_smoke_json(out, merge_min=merge)
         return
     bench_fig5_mix50()
     bench_fig6_mix80()

@@ -3,23 +3,31 @@
 
 Usage:
     python scripts/check_bench_regression.py BASELINE.json FRESH.json \
-        [--tol 0.25]
+        [--tol 0.25] [--summary PATH]
 
 Absolute us_per_tick numbers are not comparable across machines (the
 committed baseline was measured on a dev box, CI runs elsewhere), so
-each impl is compared on its share of the cell's total speed: every
-cell's timings are normalized by the geometric mean over the impls
-present in BOTH files, and an impl fails if its normalized time grew by
-more than --tol (default 25%).  A uniformly slower machine cancels out.
+each impl is compared on its share of ITS CELL's total speed: every
+cell — a (width, p_add, key_dist) workload point, including each cell
+of the w4096 workload grid — is normalized by the geometric mean over
+the impls present in BOTH files, and an impl fails if its normalized
+time grew by more than --tol (default 25%).  A uniformly slower machine
+cancels out.  Normalization never crosses cells: a PR that speeds up
+the balanced-mix cells must not make the unbalanced cells look
+relatively slower.
 
-Caveat: the normalization couples impls — a PR that intentionally
-speeds up SOME impls shifts the geomean and makes the untouched ones
-look relatively slower.  That is by design: any PR that changes
-relative performance must re-run `benchmarks/run.py --smoke` and commit
-the fresh BENCH_pq.json (then baseline == CI measurement and the gate
-passes); the gate exists to catch perf-relevant changes shipped WITHOUT
-re-baselining.  An impl present only in one file is reported but not
-gated (lets the sweep grow lanes).
+Caveat: within a cell the normalization couples impls — a PR that
+intentionally speeds up SOME impls shifts the geomean and makes the
+untouched ones look relatively slower.  That is by design: any PR that
+changes relative performance must re-run `benchmarks/run.py --smoke`
+and commit the fresh BENCH_pq.json (then baseline == CI measurement and
+the gate passes); the gate exists to catch perf-relevant changes
+shipped WITHOUT re-baselining.  An impl present only in one file is
+reported but not gated (lets the sweep grow lanes/variants).
+
+A markdown perf table is appended to --summary when given, or to
+$GITHUB_STEP_SUMMARY when set — so the per-cell trajectory is readable
+straight from the Actions run page.
 """
 
 from __future__ import annotations
@@ -27,12 +35,32 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import sys
 
 
 def _normalized(cell: dict, keys: list) -> dict:
     gm = math.exp(sum(math.log(cell[k]) for k in keys) / len(keys))
     return {k: cell[k] / gm for k in keys}
+
+
+def _markdown_table(rows, tol) -> str:
+    lines = [
+        "## PQ bench perf gate (per-cell machine-normalized, "
+        f"tol {tol:.0%})",
+        "",
+        "| cell | impl | baseline µs | fresh µs | norm. ratio | status |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for cell, impl, bus, fus, ratio, status in rows:
+        r = f"x{ratio:.2f}" if ratio is not None else "—"
+        b = f"{bus:.0f}" if bus is not None else "—"
+        f = f"{fus:.0f}" if fus is not None else "—"
+        icon = {"ok": "✅", "REGRESSION": "❌"}.get(status, "➖")
+        lines.append(f"| {cell} | {impl} | {b} | {f} | {r} "
+                     f"| {icon} {status} |")
+    lines.append("")
+    return "\n".join(lines)
 
 
 def main() -> int:
@@ -42,6 +70,9 @@ def main() -> int:
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed relative growth of an impl's "
                          "machine-normalized us_per_tick")
+    ap.add_argument("--summary", default=None,
+                    help="append a markdown perf table to this path "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -50,6 +81,16 @@ def main() -> int:
         fresh = json.load(f)["results"]
 
     failures = []
+    rows = []          # (cell, impl, base_us, fresh_us, ratio, status)
+    # whole cells present on one side only are loud, not silent: a grown
+    # grid without a re-baseline would otherwise LOOK gated while the
+    # new cells go unmonitored
+    for cell_name in sorted(set(base) ^ set(fresh)):
+        where = "baseline" if cell_name in base else "fresh"
+        print(f"{cell_name}: cell only in {where}, NOT GATED — "
+              "re-baseline to cover it")
+        rows.append((cell_name, "(all)", None, None, None,
+                     f"cell only in {where}"))
     for cell_name in sorted(set(base) & set(fresh)):
         bcell, fcell = base[cell_name], fresh[cell_name]
         shared = sorted(set(bcell) & set(fcell))
@@ -63,21 +104,34 @@ def main() -> int:
             flag = "REGRESSION" if ratio > 1 + args.tol else "ok"
             print(f"{cell_name}/{impl}: normalized {bn[impl]:.3f} -> "
                   f"{fn[impl]:.3f} (x{ratio:.2f}) {flag}")
+            rows.append((cell_name, impl, bcell[impl], fcell[impl],
+                         ratio, flag))
             if ratio > 1 + args.tol:
                 failures.append((cell_name, impl, ratio))
         for impl in sorted(set(bcell) ^ set(fcell)):
             where = "baseline" if impl in bcell else "fresh"
             print(f"{cell_name}/{impl}: only in {where}, not gated")
+            rows.append((cell_name, impl, bcell.get(impl),
+                         fcell.get(impl), None, f"only in {where}"))
+
+    summary_path = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path and rows:
+        with open(summary_path, "a") as f:
+            f.write(_markdown_table(rows, args.tol) + "\n")
 
     if failures:
         print(f"\nFAIL: {len(failures)} impl(s) regressed more than "
-              f"{args.tol:.0%} (machine-normalized):")
+              f"{args.tol:.0%} (machine-normalized within their cell):")
         for cell, impl, ratio in failures:
             print(f"  {cell}/{impl}: x{ratio:.2f}")
         print("If this PR changed performance on purpose (including "
               "speeding OTHER impls up — the normalization couples "
-              "them), regenerate the baseline:\n"
+              "impls within a cell), regenerate the baseline:\n"
               "  PYTHONPATH=src:. python benchmarks/run.py --smoke\n"
+              "then fold in 1-2 more runs (single runs swing ~2x on "
+              "shared boxes):\n"
+              "  PYTHONPATH=src:. python benchmarks/run.py --smoke "
+              "--merge-min BENCH_pq.json\n"
               "and commit the fresh BENCH_pq.json.")
         return 1
     print("\nOK: no impl regressed beyond tolerance")

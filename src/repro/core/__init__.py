@@ -8,7 +8,8 @@ Public API:
     make_distributed_tick               — shard_map distributed queue
     sharded (module)                    — L-lane vmapped relaxed queue
                                           (MultiQueues-style, c-relaxed
-                                          removes; repro.core.sharded)
+                                          removes, adaptive pre-route
+                                          elimination; repro.core.sharded)
 """
 
 from repro.core.config import EMPTY_VAL, PQConfig, PRODUCTION, SMALL

@@ -21,6 +21,54 @@ _I32 = jnp.int32
 _F32 = jnp.float32
 
 
+class ElimUnsortedResult(NamedTuple):
+    n_matched: jnp.ndarray        # pairs eliminated
+    matched_keys: jnp.ndarray     # [a] dense prefix of matched keys (INF pad)
+    matched_vals: jnp.ndarray     # [a]
+    residual_mask: jnp.ndarray    # [a] bool: surviving adds, SLOT ORDER
+    residual_rm: jnp.ndarray      # scalar: surviving removeMin count
+
+
+def eliminate_batch_unsorted(add_keys, add_vals, add_mask, rm_count,
+                             min_value) -> ElimUnsortedResult:
+    """Slot-order immediate elimination — no comparator sort.
+
+    The paper licenses matching ANY add with ``key <= minValue`` against
+    a remove; :func:`eliminate_batch` picks the smallest eligible adds
+    (one deterministic choice), this variant picks the FIRST eligible in
+    slot order (another).  What it buys: no argsort of the batch — just
+    a cumsum, one searchsorted, and gathers — and the residual adds stay
+    in their original slots (their mask bits cleared), so a slot-order
+    router downstream keeps working untouched.  This is the sharded
+    queue's pre-route hot path, where the batch is ``a_total`` wide and
+    an f32 argsort costs as much as the lane work the pass avoids.
+
+    Safety is unchanged: every matched key is <= min_value, hence <=
+    every key stored anywhere, so serving it cannot displace a smaller
+    key whichever eligible subset is chosen.
+    """
+    a = add_keys.shape[0]
+    k = jnp.where(add_mask, add_keys.astype(_F32), INF)
+    v = jnp.where(add_mask, add_vals.astype(_I32), EMPTY_VAL)
+    elig = add_mask & (k <= min_value)
+    ecum = jnp.cumsum(elig.astype(_I32))
+    n_elig = ecum[a - 1]
+    n_matched = jnp.minimum(n_elig, jnp.asarray(rm_count, _I32))
+    taken = elig & (ecum <= n_matched)
+
+    # dense prefix: the j-th matched key sits at the first slot whose
+    # eligible-cumsum reaches j+1 (ecum is nondecreasing -> searchsorted)
+    j = jnp.arange(a, dtype=_I32)
+    src = jnp.clip(jnp.searchsorted(ecum, j + 1, side="left"), 0, a - 1)
+    in_pref = j < n_matched
+    matched_keys = jnp.where(in_pref, k[src], INF)
+    matched_vals = jnp.where(in_pref, v[src], EMPTY_VAL)
+
+    residual_rm = jnp.asarray(rm_count, _I32) - n_matched
+    return ElimUnsortedResult(n_matched, matched_keys, matched_vals,
+                              add_mask & ~taken, residual_rm)
+
+
 class ElimResult(NamedTuple):
     n_matched: jnp.ndarray        # pairs eliminated
     matched_keys: jnp.ndarray     # [a_max] keys handed to removes (INF pad)

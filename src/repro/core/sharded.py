@@ -15,6 +15,14 @@ Queues") combined with the explicit-synchronization batching of Aksenov &
 Kuznetsov's Parallel Combining — each tick is one synchronized round over
 all lanes:
 
+* **pre-route elimination** (paper §2.2 at queue level): before the
+  router runs, the tick's adds are matched 1:1 against its removeMin
+  allocation under the min-of-lane-heads safety bound — on balanced
+  mixes a matched pair is served directly and never pays routing, a
+  lane tick, or grant allocation.  An adaptive gate (EMA of hit rate
+  and add/remove balance, carried in :class:`ShardedState`) runs the
+  pass under one batch-level ``lax.cond`` so unbalanced workloads pay a
+  single pass-through conditional; see :func:`_preroute_eliminate`.
 * **adds** go through a *stick-random router*: each batch slot is
   assigned a lane by a PRNG permutation of the round-robin pattern
   ``slot % L`` that is held fixed ("sticks") for ``stick`` ticks before
@@ -50,7 +58,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import pqueue
+from repro.core import elimination, pqueue
 from repro.core.config import EMPTY_VAL, PQConfig
 from repro.kernels import ops as kops
 from repro.kernels.radix_select import _from_sortable_u32, _to_sortable_u32
@@ -76,6 +84,23 @@ class ShardedPQConfig:
     stick: int = 8          # ticks a routing permutation stays pinned
     a_total: int = 256      # un-sharded op-batch width fed to the router
 
+    # --- pre-route elimination (paper §2.2 at queue level) ---------------
+    # Before anything is routed, the tick's adds are matched 1:1 against
+    # its removeMin allocation using the min-of-lane-heads as the safety
+    # bound (see _preroute_eliminate).  `preroute` selects the gate:
+    #   "adaptive" — a controller (EMA of hit rate + add/remove balance,
+    #                carried in ShardedState) decides per tick under one
+    #                batch-level lax.cond, with a periodic probe tick
+    #                (every `elim_probe`, like the router's resample
+    #                cadence) so a workload shift re-measures the rate;
+    #   "on" / "off" — static forcing, used by the equivalence tests and
+    #                the bench grid's disabled variant.
+    preroute: str = "adaptive"
+    elim_probe: int = 16        # probe cadence (ticks) of the adaptive gate
+    elim_ema_decay: float = 0.25  # EMA step for both controller signals
+    elim_gate: float = 0.25       # min EMA hit rate to keep the pass on
+    balance_gate: float = 0.25    # min EMA min/max(add,rm) balance
+
     def __post_init__(self) -> None:
         if self.n_lanes < 1:
             raise ValueError("n_lanes must be >= 1")
@@ -83,6 +108,12 @@ class ShardedPQConfig:
             raise ValueError("stick must be >= 1")
         if self.a_total < 1:
             raise ValueError("a_total must be >= 1")
+        if self.preroute not in ("adaptive", "on", "off"):
+            raise ValueError("preroute must be adaptive|on|off")
+        if self.elim_probe < 1:
+            raise ValueError("elim_probe must be >= 1")
+        if not (0.0 < self.elim_ema_decay <= 1.0):
+            raise ValueError("elim_ema_decay must be in (0, 1]")
 
     # duck-typed batch geometry so drivers written against PQConfig
     # (benchmarks/pq_bench.py) can treat a sharded queue as one wide queue
@@ -96,7 +127,8 @@ class ShardedPQConfig:
 
 
 def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
-                     slack: float = 1.0) -> ShardedPQConfig:
+                     slack: float = 1.0,
+                     preroute: str = "adaptive") -> ShardedPQConfig:
     """Scale a width-`width` single-queue config down to L lanes.
 
     Per-lane batch geometry is ceil(slack * width / L) (clamped to
@@ -117,7 +149,8 @@ def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
         seq_cap=2 * per + 2,
         bucket_cap=max(base.bucket_cap // n_lanes, 8),
     )
-    return ShardedPQConfig(lane=lane, n_lanes=n_lanes, a_total=width)
+    return ShardedPQConfig(lane=lane, n_lanes=n_lanes, a_total=width,
+                           preroute=preroute)
 
 
 class ShardedState(NamedTuple):
@@ -131,6 +164,13 @@ class ShardedState(NamedTuple):
                                # resample, not once per tick)
     tick_idx: jnp.ndarray      # scalar i32 (drives re-sticking)
     n_router_dropped: jnp.ndarray   # adds dropped on lane-quota overflow
+    # pre-route elimination controller (see ShardedPQConfig.preroute):
+    elim_ema: jnp.ndarray      # scalar f32 EMA of the pass's hit rate,
+                               # updated only on ticks where the pass ran
+                               # with a nonzero pairing opportunity
+    balance_ema: jnp.ndarray   # scalar f32 EMA of min/max(n_adds, rm)
+    n_preroute_elim: jnp.ndarray    # i32 pairs eliminated before routing
+    n_preroute_ticks: jnp.ndarray   # i32 ticks where the pass ran
 
 
 class ShardedTickResult(NamedTuple):
@@ -159,6 +199,12 @@ def init(cfg: ShardedPQConfig, *, seed: int = 0) -> ShardedState:
         route_inv=jnp.arange(cfg.a_total, dtype=_I32),
         tick_idx=jnp.zeros((), _I32),
         n_router_dropped=jnp.zeros((), _I32),
+        # optimistic start: the pass runs until measured useless (tick 0
+        # is also a probe tick, so the first mixed tick measures the rate)
+        elim_ema=jnp.ones((), _F32),
+        balance_ema=jnp.zeros((), _F32),
+        n_preroute_elim=jnp.zeros((), _I32),
+        n_preroute_ticks=jnp.zeros((), _I32),
     )
 
 
@@ -311,6 +357,112 @@ def _alloc_removes(cfg: ShardedPQConfig, lanes: pqueue.PQState, rm_count,
 
 
 # ---------------------------------------------------------------------------
+# pre-route elimination (queue-level elimination array)
+# ---------------------------------------------------------------------------
+
+def _union_min(lanes: pqueue.PQState) -> jnp.ndarray:
+    """min-of-lane-heads: the EXACT minimum of the pre-tick union.
+
+    Each lane's ``min_value`` is exact for that lane (INF when empty), so
+    the min over lanes is the union minimum — the safety bound of the
+    pre-route pass.  Already replicated: it is a [L] reduction of state
+    the tick reads anyway (``_alloc_removes`` ranks the same heads)."""
+    return jnp.min(lanes.min_value)
+
+
+def _preroute_eliminate(cfg: ShardedPQConfig, state: ShardedState,
+                        add_keys, add_vals, add_mask, rm_count):
+    """Queue-level elimination BEFORE routing (paper §2.2 scaled to lanes).
+
+    The paper's elimination array lets balanced add/removeMin traffic
+    meet and cancel without ever touching the shared structure; the
+    PR-2 queue only eliminated *inside* each lane after routing, so a
+    matched pair still paid the router, a lane tick, and its grant.
+    This pass matches the tick's adds against its removeMin allocation
+    up front, bounded by the min-of-lane-heads: an add with
+    ``key <= union_min`` is <= every key stored anywhere, so serving it
+    straight to a removeMin is the strictest service any queue —
+    relaxed or exact — could give (it cannot displace a smaller key,
+    so the c-relaxation contract is untouched; DESIGN.md §6.2).
+    Matched pairs never pay routing, lane ticks, or grant allocation.
+
+    The gate (``cfg.preroute``):
+      * "adaptive" — one batch-level ``lax.cond`` decides per tick from
+        controller EMAs carried in ShardedState, so unbalanced
+        workloads pay a single pass-through conditional.  The pass runs
+        when the tick CAN pair (both adds and removes present) and
+        either (a) this is a probe tick (every ``elim_probe`` ticks,
+        the same amortization cadence as the router resample) or
+        (b) both EMAs clear their gates — the balance EMA tracks
+        min/max(adds, removes) (the paper's "similar numbers of add()
+        and removeMin()" signal) and the hit-rate EMA tracks how much
+        of the pairing opportunity recent passes actually matched.
+      * "on"/"off" — static forcing; no cond is traced at all.
+
+    Returns (residual add batch (k, v, mask), residual rm_count,
+    matched_keys, matched_vals, n_matched, ran).  Residual adds keep
+    their SLOT ORDER (matched slots' mask bits cleared) — the sortless
+    variant of the elimination pass (`eliminate_batch_unsorted`): the
+    paper licenses matching any eligible add, so no argsort of the
+    a_total-wide batch sits on this hot path, and the stick router's
+    slot-order quotas keep working untouched.
+    """
+    w = add_keys.shape[0]
+    n_adds = add_mask.sum(dtype=_I32)
+    opportunity = jnp.minimum(n_adds, rm_count)
+
+    def _run(_):
+        er = elimination.eliminate_batch_unsorted(
+            add_keys, add_vals, add_mask, rm_count,
+            _union_min(state.lanes))
+        return (add_keys.astype(_F32), add_vals.astype(_I32),
+                er.residual_mask, er.residual_rm, er.matched_keys,
+                er.matched_vals, er.n_matched, jnp.ones((), bool))
+
+    def _skip(_):
+        return (add_keys.astype(_F32), add_vals.astype(_I32), add_mask,
+                rm_count, jnp.full((w,), INF, _F32),
+                jnp.full((w,), EMPTY_VAL, _I32), jnp.zeros((), _I32),
+                jnp.zeros((), bool))
+
+    if cfg.preroute == "off":
+        return _skip(None)
+    if cfg.preroute == "on":
+        return _run(None)
+    probe = (state.tick_idx % cfg.elim_probe) == 0
+    gate = ((state.balance_ema >= cfg.balance_gate)
+            & (state.elim_ema >= cfg.elim_gate))
+    return jax.lax.cond((opportunity > 0) & (probe | gate), _run, _skip,
+                        None)
+
+
+def _controller_update(cfg: ShardedPQConfig, state: ShardedState,
+                       n_adds, rm_count, n_matched, ran):
+    """EMA bookkeeping for the adaptive gate (cheap scalar math, runs
+    unconditionally — also under forced modes, so stats stay
+    meaningful).  Each EMA only moves on ticks that carry information
+    about its signal: the hit-rate EMA when the pass ran AND could have
+    paired (opportunity > 0 — an add-only or remove-only tick says
+    nothing about elimination yield), the balance EMA on any tick with
+    ops at all (an IDLE tick says nothing about the add/remove mix —
+    decaying on idle ticks would make bursty-but-balanced workloads
+    look unbalanced and close the gate on exactly the ticks that could
+    pair)."""
+    d = jnp.asarray(cfg.elim_ema_decay, _F32)
+    opportunity = jnp.minimum(n_adds, rm_count)
+    hit = n_matched.astype(_F32) / jnp.maximum(opportunity, 1).astype(_F32)
+    elim_ema = jnp.where(ran & (opportunity > 0),
+                         (1 - d) * state.elim_ema + d * hit,
+                         state.elim_ema)
+    peak = jnp.maximum(n_adds, rm_count)
+    balance = opportunity.astype(_F32) / jnp.maximum(peak, 1).astype(_F32)
+    balance_ema = jnp.where(peak > 0,
+                            (1 - d) * state.balance_ema + d * balance,
+                            state.balance_ema)
+    return elim_ema, balance_ema
+
+
+# ---------------------------------------------------------------------------
 # the sharded tick
 # ---------------------------------------------------------------------------
 
@@ -387,7 +539,22 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
     L = cfg.n_lanes
     w = add_keys.shape[0]
     rl = cfg.lane.r_max
-    rm_count = jnp.asarray(rm_count, _I32)
+    out_w = max(w, cfg.n_lanes * rl)
+    # the result stream can hold out_w serves; with the pre-route pass a
+    # tick can serve matched pairs ON TOP of the lanes' L*r_max grants,
+    # so the request is clamped to the stream width up front
+    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), out_w)
+
+    # -- pre-route elimination: match adds against the removeMin
+    # allocation under the min-of-lane-heads bound; matched pairs are
+    # served below as a prefix of the result stream and never reach the
+    # router (gating: ShardedPQConfig.preroute / _preroute_eliminate) --
+    n_adds_in = add_mask.sum(dtype=_I32)
+    (add_keys, add_vals, add_mask, rm_residual, matched_k, matched_v,
+     n_matched, elim_ran) = _preroute_eliminate(
+        cfg, state, add_keys, add_vals, add_mask, rm_count)
+    elim_ema, balance_ema = _controller_update(
+        cfg, state, n_adds_in, rm_count, n_matched, elim_ran)
 
     # -- stick-random router refresh: the PRNG split, the permutation,
     # AND its stable inverse (the lane-grouped slot list) are all built
@@ -407,33 +574,74 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
         resample, _resample,
         lambda k: (k, state.route, state.route_inv), state.rng)
 
-    lk, lv, lm, n_drop = _route_adds_sorted(cfg, route_inv, add_keys,
-                                            add_vals, add_mask)
-    grants = _alloc_removes(cfg, state.lanes, rm_count,
-                            incoming=lm.sum(axis=-1, dtype=_I32))  # [L]
+    # -- lane-work hoist: a tick whose batch FULLY eliminated (or that
+    # has no ops for nonempty lanes to serve) skips routing, grant
+    # allocation, and the lane ticks behind one batch-level cond — this
+    # is what makes "eliminated pairs never pay routing or lane ticks"
+    # literal.  The skip is bit-exact: with zero routed adds and zero
+    # grants a lane tick reduces to quiet_ticks++ and stats.n_ticks++
+    # (the combine pass is an identity merge then, and no repair fires
+    # — asserted against jax.vmap(pqueue.tick) by
+    # tests/test_tick_repairs.py), EXCEPT when some quiet lane is about
+    # to hit chop patience with a live head — those ticks take the full
+    # path so chopHead fires exactly as the reference would --
+    lc = cfg.lane
+    n_res_adds = add_mask.sum(dtype=_I32)
+    grants0 = _alloc_removes(cfg, state.lanes, rm_residual, incoming=0)
+    quiet1 = state.lanes.quiet_ticks + 1
+    any_chop = jnp.any((quiet1 >= lc.chop_patience)
+                       & (state.lanes.seq_len > 0))
+    lane_work = ((n_res_adds > 0) | (grants0.sum(dtype=_I32) > 0)
+                 | any_chop)
 
-    lanes, res, n_lane = _lanes_tick(cfg.lane, state.lanes, lk, lv, lm,
-                                     grants, adds_sorted=True)
+    def _do(lanes_in):
+        lk, lv, lm, n_drop = _route_adds_sorted(cfg, route_inv, add_keys,
+                                                add_vals, add_mask)
+        grants = _alloc_removes(cfg, lanes_in, rm_residual,
+                                incoming=lm.sum(axis=-1, dtype=_I32))
+        lanes2, res, n_lane = _lanes_tick(lc, lanes_in, lk, lv, lm,
+                                          grants, adds_sorted=True)
+        return lanes2, res.rm_keys, res.rm_vals, n_lane, n_drop
 
-    # -- fold lane results into one compacted stream (no global sort:
-    # callers of a relaxed queue get a near-min *set*, not an order).
-    # Every lane serves a PREFIX of its result row (the removed stream
-    # is [imm elim | merged prefix | moveHead prefix], each segment
-    # dense), so compaction is ragged-segment arithmetic over the lane
-    # counts — a [out_w, L] compare-all instead of an [out_w, L*rl]
-    # searchsorted scan --
+    def _skip(lanes_in):
+        st = lanes_in.stats
+        lanes2 = lanes_in._replace(
+            quiet_ticks=quiet1,
+            stats=st._replace(n_ticks=st.n_ticks + 1))
+        return (lanes2, jnp.full((L, rl), INF, _F32),
+                jnp.full((L, rl), EMPTY_VAL, _I32),
+                jnp.zeros((L,), _I32), jnp.zeros((), _I32))
+
+    lanes, res_k, res_v, n_lane, n_drop = jax.lax.cond(
+        lane_work, _do, _skip, state.lanes)
+
+    # -- fold into one compacted stream: [pre-route matched | lane
+    # serves] (no global sort: callers of a relaxed queue get a near-min
+    # *set*, not an order).  Every lane serves a PREFIX of its result
+    # row (the removed stream is [imm elim | merged prefix | moveHead
+    # prefix], each segment dense), so compaction is ragged-segment
+    # arithmetic over the lane counts — a [out_w, L] compare-all instead
+    # of an [out_w, L*rl] searchsorted scan.  n_matched + lane grants
+    # <= rm_count <= out_w (grants are allocated from the residual), so
+    # the prefix can never push a lane serve off the end --
     cum = jnp.cumsum(n_lane)
     offs = cum - n_lane
     n_served = cum[L - 1]
-    out_w = max(w, cfg.n_lanes * rl)
     j = jnp.arange(out_w, dtype=_I32)
-    row = jnp.clip(kops.searchsorted_last(cum, j, side="right"),
-                   0, L - 1)
-    col = jnp.clip(j - offs[row], 0, rl - 1)
-    got = j < n_served
+    jl = j - n_matched                     # rank within the lane segment
+    row = jnp.clip(kops.searchsorted_last(cum, jnp.maximum(jl, 0),
+                                          side="right"), 0, L - 1)
+    col = jnp.clip(jl - offs[row], 0, rl - 1)
+    got_lane = (jl >= 0) & (jl < n_served)
+    in_matched = j < n_matched
     flat = row * rl + col
-    rm_keys = jnp.where(got, res.rm_keys.reshape(-1)[flat], INF)
-    rm_vals = jnp.where(got, res.rm_vals.reshape(-1)[flat], EMPTY_VAL)
+    rm_keys = jnp.where(
+        in_matched, matched_k[jnp.clip(j, 0, w - 1)],
+        jnp.where(got_lane, res_k.reshape(-1)[flat], INF))
+    rm_vals = jnp.where(
+        in_matched, matched_v[jnp.clip(j, 0, w - 1)],
+        jnp.where(got_lane, res_v.reshape(-1)[flat], EMPTY_VAL))
+    got = in_matched | got_lane
 
     new_state = ShardedState(
         lanes=lanes,
@@ -442,6 +650,10 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
         route_inv=route_inv,
         tick_idx=state.tick_idx + 1,
         n_router_dropped=state.n_router_dropped + n_drop,
+        elim_ema=elim_ema,
+        balance_ema=balance_ema,
+        n_preroute_elim=state.n_preroute_elim + n_matched,
+        n_preroute_ticks=state.n_preroute_ticks + elim_ran.astype(_I32),
     )
     return new_state, ShardedTickResult(rm_keys, rm_vals, got)
 
@@ -476,6 +688,37 @@ def tick_n(cfg: ShardedPQConfig, state: ShardedState, add_keys, add_vals,
 # ---------------------------------------------------------------------------
 # introspection helpers (tests, benches)
 # ---------------------------------------------------------------------------
+
+class ShardedStats(NamedTuple):
+    """Aggregated per-path counters of the whole sharded queue.
+
+    ``lane`` is the per-lane :class:`pqueue.PQStats` REDUCED over the
+    lane axis (every counter summed), so the paper's Figs. 7–8
+    accounting reads the same way it does for the single queue; the
+    queue-level counters cover what no lane can see — the pre-route
+    elimination pass and the router."""
+
+    lane: pqueue.PQStats            # per-lane counters summed over L
+    n_preroute_elim: jnp.ndarray    # pairs matched BEFORE routing
+    n_preroute_ticks: jnp.ndarray   # ticks where the pre-route pass ran
+    n_router_dropped: jnp.ndarray
+    n_ticks: jnp.ndarray            # sharded ticks (== tick_idx)
+    elim_ema: jnp.ndarray           # controller signals, as of now
+    balance_ema: jnp.ndarray
+
+
+def stats(state: ShardedState) -> ShardedStats:
+    """Aggregate the queue's counters (lane reduction + queue level)."""
+    return ShardedStats(
+        lane=jax.tree.map(lambda x: x.sum(axis=0), state.lanes.stats),
+        n_preroute_elim=state.n_preroute_elim,
+        n_preroute_ticks=state.n_preroute_ticks,
+        n_router_dropped=state.n_router_dropped,
+        n_ticks=state.tick_idx,
+        elim_ema=state.elim_ema,
+        balance_ema=state.balance_ema,
+    )
+
 
 def size(state: ShardedState) -> jnp.ndarray:
     return (state.lanes.seq_len + state.lanes.par_count).sum()

@@ -1,0 +1,190 @@
+"""Edge coverage for the standalone batch elimination pass (paper §2.2).
+
+``eliminate_batch`` is now load-bearing twice over: inlined in the
+single-queue tick AND called by the sharded queue's pre-route pass
+(repro.core.sharded._preroute_eliminate), where a wrong residual or a
+phantom match would silently break multiset conservation at queue
+level.  These tests pin the edges the property suites only hit by
+chance: rm_count > n_adds, the empty batch, an all-eligible batch, and
+duplicate keys sitting exactly on the min bound.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import eliminate_batch
+from repro.core.config import EMPTY_VAL
+from repro.core.elimination import eliminate_batch_unsorted
+
+A = 16
+INF = np.inf
+
+
+def _call(keys, vals=None, rm_count=0, min_value=INF, width=A):
+    keys = np.asarray(keys, np.float32)
+    n = len(keys)
+    if vals is None:
+        vals = np.arange(n, dtype=np.int32)
+    ak = np.full((width,), INF, np.float32)
+    av = np.full((width,), EMPTY_VAL, np.int32)
+    mask = np.zeros((width,), bool)
+    ak[:n] = keys
+    av[:n] = vals
+    mask[:n] = True
+    return eliminate_batch(jnp.asarray(ak), jnp.asarray(av),
+                           jnp.asarray(mask), jnp.asarray(rm_count),
+                           jnp.asarray(min_value, jnp.float32))
+
+
+def _finite(arr):
+    a = np.asarray(arr)
+    return a[a < INF]
+
+
+def test_rm_count_exceeds_adds():
+    """More removes than adds: every eligible add matches, the surplus
+    removes survive as residual_rm, and no phantom matches appear."""
+    r = _call([5.0, 1.0, 3.0], rm_count=10, min_value=100.0)
+    assert int(r.n_matched) == 3
+    np.testing.assert_array_equal(_finite(r.matched_keys), [1.0, 3.0, 5.0])
+    assert len(_finite(r.residual_keys)) == 0
+    assert int(r.residual_rm) == 7
+
+
+def test_empty_batch():
+    """No adds at all: nothing matches, all removes pass through."""
+    r = _call([], rm_count=5, min_value=100.0)
+    assert int(r.n_matched) == 0
+    assert len(_finite(r.matched_keys)) == 0
+    assert len(_finite(r.residual_keys)) == 0
+    assert int(r.residual_rm) == 5
+    # and the degenerate empty/empty tick
+    r = _call([], rm_count=0)
+    assert int(r.n_matched) == 0 and int(r.residual_rm) == 0
+
+
+def test_all_eligible_exact_pairing():
+    """Every add <= the bound and removes == adds: full cancellation."""
+    keys = [7.0, 2.0, 9.0, 4.0]
+    r = _call(keys, rm_count=4, min_value=9.0)
+    assert int(r.n_matched) == 4
+    np.testing.assert_array_equal(_finite(r.matched_keys), sorted(keys))
+    assert len(_finite(r.residual_keys)) == 0
+    assert int(r.residual_rm) == 0
+
+
+def test_duplicate_keys_at_min_bound():
+    """Keys exactly == min_value are eligible (paper: v <= minValue), and
+    duplicates at the bound are matched as a multiset — each copy counts
+    once, the smallest-first order is deterministic."""
+    keys = [3.0, 3.0, 3.0, 8.0, 1.0]
+    r = _call(keys, rm_count=2, min_value=3.0)
+    # eligible multiset is {1, 3, 3, 3}; the 2 removes take the smallest
+    assert int(r.n_matched) == 2
+    np.testing.assert_array_equal(_finite(r.matched_keys), [1.0, 3.0])
+    # residual keeps the remaining copies, sorted, nothing invented
+    np.testing.assert_array_equal(_finite(r.residual_keys),
+                                  [3.0, 3.0, 8.0])
+    assert int(r.residual_rm) == 0
+
+
+def test_eligibility_cuts_at_bound():
+    """Adds strictly above the bound never match, whatever rm_count."""
+    r = _call([10.0, 20.0, 30.0], rm_count=8, min_value=9.999)
+    assert int(r.n_matched) == 0
+    np.testing.assert_array_equal(_finite(r.residual_keys),
+                                  [10.0, 20.0, 30.0])
+    assert int(r.residual_rm) == 8
+
+
+def test_matched_plus_residual_is_input_multiset():
+    """Conservation: matched ∪ residual == the input add multiset, with
+    residual sorted ascending; payloads ride with their keys."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(0, A + 1))
+        keys = np.round(rng.uniform(0, 10, n), 2).astype(np.float32)
+        rm = int(rng.integers(0, A + 1))
+        bound = float(np.round(rng.uniform(0, 10), 2))
+        r = _call(keys, rm_count=rm, min_value=bound)
+        mk, rk = _finite(r.matched_keys), _finite(r.residual_keys)
+        assert sorted(np.concatenate([mk, rk]).tolist()) == sorted(
+            keys.tolist())
+        assert (np.diff(rk) >= 0).all()
+        assert int(r.n_matched) + int(r.residual_rm) == rm
+        # every matched key is eligible
+        assert (mk <= bound).all()
+        # key->val pairing preserved (vals are the key's index)
+        vals = np.asarray(r.matched_vals)[:int(r.n_matched)]
+        for k, v in zip(mk, vals):
+            assert np.float32(keys[v]) == np.float32(k)
+
+
+# ---------------------------------------------------------------------------
+# the sortless slot-order variant (the sharded pre-route hot path)
+# ---------------------------------------------------------------------------
+
+def _call_unsorted(keys, vals=None, rm_count=0, min_value=INF, width=A):
+    keys = np.asarray(keys, np.float32)
+    n = len(keys)
+    if vals is None:
+        vals = np.arange(n, dtype=np.int32)
+    ak = np.full((width,), INF, np.float32)
+    av = np.full((width,), EMPTY_VAL, np.int32)
+    mask = np.zeros((width,), bool)
+    ak[:n] = keys
+    av[:n] = vals
+    mask[:n] = True
+    return eliminate_batch_unsorted(
+        jnp.asarray(ak), jnp.asarray(av), jnp.asarray(mask),
+        jnp.asarray(rm_count), jnp.asarray(min_value, jnp.float32))
+
+
+def test_unsorted_matches_same_count_as_sorted():
+    """Both variants match the same NUMBER of pairs on any input (the
+    count depends only on eligibility, not on which eligible adds are
+    picked); the sorted variant picks smallest-first, the unsorted one
+    first-in-slot-order."""
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        n = int(rng.integers(0, A + 1))
+        keys = np.round(rng.uniform(0, 10, n), 2).astype(np.float32)
+        rm = int(rng.integers(0, A + 1))
+        bound = float(np.round(rng.uniform(0, 10), 2))
+        rs = _call(keys, rm_count=rm, min_value=bound)
+        ru = _call_unsorted(keys, rm_count=rm, min_value=bound)
+        assert int(rs.n_matched) == int(ru.n_matched)
+        assert int(rs.residual_rm) == int(ru.residual_rm)
+        # every unsorted match is eligible and pairs first-in-slot-order
+        mk = _finite(ru.matched_keys)
+        assert (mk <= bound).all()
+        elig_slots = [i for i, k in enumerate(keys) if k <= bound]
+        np.testing.assert_array_equal(
+            mk, keys[elig_slots[:int(ru.n_matched)]])
+
+
+def test_unsorted_residual_mask_conserves_slots():
+    """residual_mask clears exactly the matched slots; survivors stay
+    put (slot order preserved for the downstream router)."""
+    keys = [9.0, 1.0, 8.0, 2.0, 7.0]
+    r = _call_unsorted(keys, rm_count=2, min_value=5.0)
+    # eligible slots are 1 (key 1.0) and 3 (key 2.0); both match
+    assert int(r.n_matched) == 2
+    np.testing.assert_array_equal(_finite(r.matched_keys), [1.0, 2.0])
+    mask = np.asarray(r.residual_mask)
+    np.testing.assert_array_equal(
+        mask[:5], [True, False, True, False, True])
+    assert not mask[5:].any()
+
+
+def test_unsorted_edges():
+    """The same edges as the sorted variant: rm > adds, empty batch,
+    all-eligible, duplicates at the bound."""
+    r = _call_unsorted([5.0, 1.0], rm_count=9, min_value=100.0)
+    assert int(r.n_matched) == 2 and int(r.residual_rm) == 7
+    r = _call_unsorted([], rm_count=4)
+    assert int(r.n_matched) == 0 and int(r.residual_rm) == 4
+    r = _call_unsorted([3.0, 3.0, 3.0], rm_count=2, min_value=3.0)
+    assert int(r.n_matched) == 2
+    np.testing.assert_array_equal(_finite(r.matched_keys), [3.0, 3.0])
+    assert np.asarray(r.residual_mask)[:3].sum() == 1

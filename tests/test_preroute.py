@@ -1,0 +1,249 @@
+"""Pre-route elimination: safety, conservation, and the adaptive gate.
+
+The sharded queue's pre-route pass (repro.core.sharded) serves matched
+add/removeMin pairs before anything is routed, bounded by the
+min-of-lane-heads.  Contracts pinned here:
+
+* **equivalence/conservation** — the same seeded workload run with the
+  pass forced ON and forced OFF serves the SAME multiset of keys once
+  fully drained (and each equals the inserted multiset): the pass
+  changes who pays for a serve, never what is served overall;
+* **safety** — with the pass forced on, every removed key still lies
+  within the c-relaxation envelope (a matched add is <= the union
+  minimum, the strictest service possible);
+* **adaptive gate** — the controller keeps the pass ON under a
+  balanced eligible mix and gates it OFF (probes aside) when
+  elimination stops paying, re-engaging after a workload shift.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PQConfig
+from repro.core import sharded as shq
+from repro.core.config import EMPTY_VAL
+
+W = 64
+BASE = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16, bucket_cap=32,
+                detach_min=4, detach_max=64, detach_init=8, chop_patience=8)
+
+
+def _tick(cfg, state, keys, vals, n_rm):
+    ak = np.full((W,), np.inf, np.float32)
+    av = np.full((W,), EMPTY_VAL, np.int32)
+    mask = np.zeros((W,), bool)
+    ak[:len(keys)] = keys
+    av[:len(keys)] = vals
+    mask[:len(keys)] = True
+    return shq.tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
+                    jnp.asarray(mask), jnp.asarray(n_rm))
+
+
+def _served(res):
+    return np.asarray(res.rm_keys)[np.asarray(res.rm_served)].tolist()
+
+
+def _run_workload(cfg, seed, ticks=40):
+    """Seeded mixed workload + full drain; returns (inserted, served)."""
+    state = shq.init(cfg, seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    load_cap = cfg.n_lanes * cfg.lane.par_cap // 2
+    inserted, served = [], []
+    for _ in range(ticks):
+        n_add = min(int(rng.integers(0, W + 1)),
+                    load_cap - int(shq.size(state)))
+        n_rm = int(rng.integers(0, W // 2 + 1))
+        keys = np.round(rng.uniform(0, 1000, n_add), 3).astype(np.float32)
+        vals = np.arange(n_add, dtype=np.int32)
+        inserted += keys.tolist()
+        state, res = _tick(cfg, state, keys, vals, n_rm)
+        served += _served(res)
+    for _ in range(128):
+        state, res = _tick(cfg, state, np.array([], np.float32),
+                           np.array([], np.int32), W)
+        got = _served(res)
+        if not got:
+            break
+        served += got
+    assert int(shq.size(state)) == 0
+    assert int(state.n_router_dropped) == 0
+    assert int(state.lanes.stats.n_dropped.sum()) == 0
+    return inserted, served, shq.stats(state)
+
+
+@pytest.mark.parametrize("lanes", [2, 8])
+def test_forced_on_off_same_served_multiset(lanes):
+    """Forced on vs forced off: identical served multiset after a full
+    drain, each equal to the inserted multiset (conservation)."""
+    on = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="on")
+    off = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="off")
+    ins_on, got_on, st_on = _run_workload(on, seed=5)
+    ins_off, got_off, st_off = _run_workload(off, seed=5)
+    assert ins_on == ins_off                      # same seeded workload
+    assert sorted(np.float32(x) for x in got_on) == sorted(
+        np.float32(x) for x in got_off)
+    assert sorted(np.float32(x) for x in got_on) == sorted(
+        np.float32(x) for x in ins_on)
+    # the pass actually fired in forced-on and never in forced-off
+    assert int(st_on.n_preroute_elim) > 0
+    assert int(st_on.n_preroute_ticks) == int(st_on.n_ticks)
+    assert int(st_off.n_preroute_elim) == 0
+    assert int(st_off.n_preroute_ticks) == 0
+
+
+def test_adaptive_same_served_multiset_as_off():
+    """The adaptive gate is also conservation-neutral end to end."""
+    ad = shq.make_sharded_cfg(W, 4, base=BASE, preroute="adaptive")
+    off = shq.make_sharded_cfg(W, 4, base=BASE, preroute="off")
+    ins_a, got_a, _ = _run_workload(ad, seed=11)
+    ins_o, got_o, _ = _run_workload(off, seed=11)
+    assert ins_a == ins_o
+    assert sorted(np.float32(x) for x in got_a) == sorted(
+        np.float32(x) for x in got_o)
+
+
+@pytest.mark.parametrize("lanes", [2, 8])
+def test_preroute_on_respects_relax_bound(lanes):
+    """Safety: with the pass forced ON, every removed key still lies
+    within the c smallest of the union (pre-tick contents + adds) —
+    the min-of-lane-heads bound means a matched add can never displace
+    a smaller stored key."""
+    cfg = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="on")
+    state = shq.init(cfg, seed=1)
+    rng = np.random.default_rng(42)
+    mirror = []
+    load_cap = lanes * cfg.lane.par_cap // 2
+    for t in range(40):
+        n_add = min(int(rng.integers(0, W + 1)), load_cap - len(mirror))
+        n_rm = int(rng.integers(0, W // 2 + 1))
+        keys = np.round(rng.uniform(0, 1000, n_add), 3).astype(np.float32)
+        vals = np.arange(n_add, dtype=np.int32)
+        combined = sorted(mirror + keys.tolist())
+        c = shq.relax_bound(cfg, n_rm)
+        cutoff = combined[c - 1] if c <= len(combined) else np.inf
+        state, res = _tick(cfg, state, keys, vals, n_rm)
+        got = _served(res)
+        assert len(got) <= n_rm
+        for k in got:
+            assert k <= cutoff
+            combined.remove(float(np.float32(k)))
+        mirror = combined
+    assert int(shq.size(state)) == len(mirror)
+
+
+def test_preroute_serves_eligible_adds_directly():
+    """An add below the union minimum pairs with a remove in the SAME
+    tick and shows up in the removed stream; the lane counters show the
+    pair never reached a lane."""
+    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="on")
+    state = shq.init(cfg, seed=0)
+    # standing load far above the incoming keys
+    high = np.linspace(500, 600, 32).astype(np.float32)
+    state, _ = _tick(cfg, state, high, np.arange(32, dtype=np.int32), 0)
+    lane_adds_before = int(
+        (state.lanes.stats.add_imm_elim + state.lanes.stats.add_upc_elim
+         + state.lanes.stats.add_seq + state.lanes.stats.add_par).sum())
+    low = np.array([1.0, 2.0, 3.0], np.float32)
+    state, res = _tick(cfg, state, low, np.arange(3, dtype=np.int32), 3)
+    got = sorted(_served(res))
+    assert got == [1.0, 2.0, 3.0]
+    st = shq.stats(state)
+    assert int(st.n_preroute_elim) == 3
+    lane_adds_after = int(
+        (st.lane.add_imm_elim + st.lane.add_upc_elim + st.lane.add_seq
+         + st.lane.add_par))
+    assert lane_adds_after == lane_adds_before   # nothing was routed
+    assert int(shq.size(state)) == 32            # standing load untouched
+
+
+def test_adaptive_gate_disengages_and_reengages():
+    """Unbalanced mix (8 adds : 1 remove — min/max balance 0.125, below
+    balance_gate): after the balance EMA settles, the pass runs on probe
+    ticks only.  A shift back to a balanced mix re-engages it within an
+    EMA settle window (no probe needed — the hit-rate EMA never decayed,
+    since probes on an unbalanced-but-eligible mix keep measuring).
+
+    A balanced-but-ineligible mix cannot gate the pass off for long by
+    construction: removes drain the union minimum up toward the incoming
+    keys until inflow-below-min matches the removal rate (the hold-model
+    equilibrium — exactly the regime the paper says elimination serves),
+    so the balance signal is the controller's durable off-switch and the
+    hit-rate EMA guards the transients.
+    """
+    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="adaptive")
+    state = shq.init(cfg, seed=0)
+    rng = np.random.default_rng(0)
+
+    def mixed_tick(state, n_add, n_rm):
+        keys = rng.uniform(0, 1000, n_add).astype(np.float32)
+        return _tick(cfg, state, keys, np.arange(n_add, dtype=np.int32),
+                     n_rm)
+
+    # phase 1: 8 adds vs 1 remove — balance EMA sinks below the gate
+    settle = 2 * cfg.elim_probe
+    for t in range(settle):
+        state, _ = mixed_tick(state, 8, 1)
+    assert float(state.balance_ema) < cfg.balance_gate
+    ran_before = int(state.n_preroute_ticks)
+    window = 2 * cfg.elim_probe
+    for t in range(window):
+        state, _ = mixed_tick(state, 8, 1)
+    ran_phase1 = int(state.n_preroute_ticks) - ran_before
+    assert ran_phase1 <= window // cfg.elim_probe + 1, (
+        f"gate should be probe-only, ran {ran_phase1}/{window}")
+
+    # phase 2: balanced mix — the balance EMA recovers within a few
+    # ticks and the pass runs on (nearly) every tick again
+    for t in range(cfg.elim_probe):
+        state, _ = mixed_tick(state, 16, 16)
+    ran_before = int(state.n_preroute_ticks)
+    for t in range(window):
+        state, _ = mixed_tick(state, 16, 16)
+    ran_phase2 = int(state.n_preroute_ticks) - ran_before
+    assert ran_phase2 > window // 2, (
+        f"gate never re-engaged ({ran_phase2}/{window} runs)")
+    assert int(state.n_preroute_elim) > 0
+
+
+def test_balance_ema_frozen_on_idle_ticks():
+    """An idle tick carries no information about the add/remove mix:
+    the balance EMA must freeze, not decay — otherwise bursty-but-
+    balanced workloads (balanced tick, then idle gaps) look unbalanced
+    and the gate closes on exactly the ticks that could pair."""
+    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="adaptive")
+    state = shq.init(cfg, seed=0)
+    rng = np.random.default_rng(2)
+    # a few balanced ticks push the balance EMA up
+    for _ in range(8):
+        keys = rng.uniform(0, 1000, 16).astype(np.float32)
+        state, _ = _tick(cfg, state, keys, np.arange(16, dtype=np.int32),
+                         16)
+    bal = float(state.balance_ema)
+    assert bal > cfg.balance_gate
+    # idle gap: EMA must not move
+    for _ in range(10):
+        state, _ = _tick(cfg, state, np.array([], np.float32),
+                         np.array([], np.int32), 0)
+    assert float(state.balance_ema) == bal
+    # and the burst pattern keeps the gate open: the next balanced,
+    # eligible tick still runs the pass off-probe
+    ran_before = int(state.n_preroute_ticks)
+    if int(state.tick_idx) % cfg.elim_probe == 0:   # dodge a probe tick
+        state, _ = _tick(cfg, state, np.array([], np.float32),
+                         np.array([], np.int32), 0)
+    keys = rng.uniform(-10, -1, 16).astype(np.float32)
+    state, _ = _tick(cfg, state, keys, np.arange(16, dtype=np.int32), 16)
+    assert int(state.n_preroute_ticks) == ran_before + 1
+
+
+def test_preroute_counts_capped_by_result_width():
+    """rm_count beyond the result stream width is clamped: the tick can
+    never claim more serves than the stream can carry."""
+    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="on")
+    state = shq.init(cfg, seed=0)
+    keys = np.linspace(1, 64, W).astype(np.float32)
+    state, res = _tick(cfg, state, keys, np.arange(W, dtype=np.int32),
+                       10_000)
+    assert int(np.asarray(res.rm_served).sum()) <= res.rm_keys.shape[0]
+    assert int(shq.size(state)) == 0     # everything eliminated through

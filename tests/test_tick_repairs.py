@@ -49,7 +49,11 @@ def _assert_trees_equal(a, b, what):
 
 @pytest.mark.parametrize("lanes", [2, 4])
 def test_fused_lane_tick_matches_vmapped_reference(lanes):
-    cfg = shq.make_sharded_cfg(W, lanes, base=BASE)
+    # preroute forced OFF: the hand-built reference path below feeds the
+    # lanes the FULL batch and rm_count, so any pre-route match inside
+    # shq.tick would (correctly) diverge from it — the pre-route layer
+    # has its own equivalence/conservation suite in tests/test_preroute.py
+    cfg = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="off")
     lc = cfg.lane
     state = shq.init(cfg, seed=7)
     rng = np.random.default_rng(11)
