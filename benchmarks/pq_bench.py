@@ -70,6 +70,36 @@ def make_impl_cfg(impl: str, width: int, *, lanes: int = DEFAULT_LANES,
     return base
 
 
+def gen_mix_batches(width: int, n_add: int, n_rm: int, ticks: int, rng,
+                    key_dist: str):
+    """Pre-generated per-tick op batches of the p-coin mix workload
+    (host work out of every timed loop).  SHARED by bench_mix and
+    benchmarks/dist_bench.py: the dist cells are only comparable to
+    their in-process single-device reference because both drivers
+    consume bit-identical streams from this one generator.
+
+    key_dist "des" advances a virtual clock with the removal rate (the
+    hold model: new keys cluster just above the current minimum);
+    "uniform" draws over the whole key space.
+    """
+    lo = 0.0
+    batches = []
+    for t in range(ticks):
+        ak = np.full((width,), np.inf, np.float32)
+        av = np.arange(width, dtype=np.int32)
+        mask = np.zeros((width,), bool)
+        if key_dist == "des":
+            lo += n_rm * KEY_HI / max(WARM_ELEMENTS, 1)
+            ak[:n_add] = lo + rng.exponential(KEY_HI / WARM_ELEMENTS * 8,
+                                              n_add)
+        else:
+            ak[:n_add] = rng.uniform(0, KEY_HI, n_add)
+        mask[:n_add] = True
+        batches.append((jnp.asarray(ak), jnp.asarray(av),
+                        jnp.asarray(mask)))
+    return batches
+
+
 def _warm(cfg, impl_init, impl_tick, rng):
     state = impl_init(cfg)
     keys = rng.uniform(0, KEY_HI, WARM_ELEMENTS).astype(np.float32)
@@ -113,24 +143,7 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
 
     n_add = int(round(width * p_add))
     n_rm = width - n_add
-
-    # pre-generate inputs (host work out of the timed loop)
-    lo = 0.0
-    batches = []
-    for t in range(ticks):
-        ak = np.full((cfg.a_max,), np.inf, np.float32)
-        av = np.arange(cfg.a_max, dtype=np.int32)
-        mask = np.zeros((cfg.a_max,), bool)
-        if key_dist == "des":
-            # advance a virtual clock ~ with the removal rate
-            lo += n_rm * KEY_HI / max(WARM_ELEMENTS, 1)
-            ak[:n_add] = lo + rng.exponential(KEY_HI / WARM_ELEMENTS * 8,
-                                              n_add)
-        else:
-            ak[:n_add] = rng.uniform(0, KEY_HI, n_add)
-        mask[:n_add] = True
-        batches.append((jnp.asarray(ak), jnp.asarray(av),
-                        jnp.asarray(mask)))
+    batches = gen_mix_batches(cfg.a_max, n_add, n_rm, ticks, rng, key_dist)
     rmc = jnp.asarray(n_rm, jnp.int32)
 
     # the donating ticks consume their state argument: warm up / compile

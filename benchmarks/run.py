@@ -174,24 +174,47 @@ def bench_dryrun_summary() -> None:
               f"|fits={r['memory']['fits_hbm']}")
 
 
-def bench_dist_elimination() -> None:
-    """Elimination = communication avoidance (the paper's thesis at pod
-    scale): distributed tick with vs without local elimination, 8 fake
-    devices in a subprocess (device count locks at first jax init)."""
+def _run_dist_bench(required: bool):
+    """benchmarks/dist_bench.py in a subprocess (device count locks at
+    first jax init, so the 8-fake-device cells can never share this
+    process).  Returns the parsed DIST_CELLS_JSON payload; `required`
+    raises instead of emitting a failure line, so the smoke bench (whose
+    cells the regression gate tracks) can never silently drop the
+    multi-device trajectory."""
+    import os
     import subprocess
     import sys
+    env = {**os.environ,
+           "PYTHONPATH": "src:" + os.environ.get("PYTHONPATH", ".")}
     proc = subprocess.run(
         [sys.executable, "benchmarks/dist_bench.py"],
-        capture_output=True, text=True, timeout=1200,
-        env={**__import__("os").environ, "PYTHONPATH": "src"})
+        capture_output=True, text=True, timeout=2400, env=env)
     if proc.returncode != 0:
-        _emit("dist_elim_failed", 0.0,
-              proc.stderr.strip().splitlines()[-1][:80]
-              if proc.stderr else "?")
-        return
+        msg = (proc.stderr.strip().splitlines()[-1][:200]
+               if proc.stderr else "?")
+        if required:
+            raise RuntimeError(
+                f"dist bench failed (exit {proc.returncode}): {msg}\n"
+                f"{proc.stderr[-4000:]}")
+        _emit("dist_bench_failed", 0.0, msg[:80])
+        return None
     for line in proc.stdout.strip().splitlines():
         if line.startswith("dist_"):
             print(line)
+    for line in proc.stdout.splitlines():
+        if line.startswith("DIST_CELLS_JSON "):
+            return json.loads(line[len("DIST_CELLS_JSON "):])
+    if required:
+        raise RuntimeError("dist bench produced no DIST_CELLS_JSON line")
+    return None
+
+
+def bench_dist_elimination() -> None:
+    """Elimination = communication avoidance (the paper's thesis at pod
+    scale): the lanes-over-devices DistShardedQueue with pre-route
+    elimination adaptive vs forced off, plus the single-device
+    sharded_L8 reference, 8 fake devices in a subprocess."""
+    _run_dist_bench(required=False)
 
 
 def bench_straggler() -> None:
@@ -230,7 +253,13 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
       key_dist ∈ {des, uniform} for `pqe`, `sharded_L8`, and
       `sharded_L8_noelim` (pre-route elimination forced off), so the
       balanced-mix elimination win — the paper's headline — is a
-      measured, regression-gated number instead of a claim.
+      measured, regression-gated number instead of a claim;
+    * the MULTI-DEVICE cells (`*_dist`, benchmarks/dist_bench.py in a
+      subprocess with 8 forced host devices) — `dist_sharded_D8` (the
+      lanes-over-devices DistShardedQueue, D=8 × l=1), its
+      elimination-off ablation, and the single-device `sharded_L8`
+      reference measured in the SAME process, so the shard_map path's
+      trajectory is gated per cell like the single-device grid.
 
     Each cell entry is the best of three runs: shared boxes showed up
     to 4x ambient inflation run-to-run, and the min is the standard
@@ -288,6 +317,16 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         for name, us in cell.items():
             _emit(f"smoke_{name}_{cname}", us, "us_per_tick")
 
+    # multi-device cells (subprocess, 8 forced host devices): the dist
+    # engine vs the single-device reference on the same workload —
+    # REQUIRED, so CI can never silently drop the dist trajectory
+    dist = _run_dist_bench(required=True)
+    dist_cells = dist["cells"]
+    for cname, cell in dist_cells.items():
+        results[cname] = cell
+        for name, us in cell.items():
+            _emit(f"smoke_{name}_{cname}", us, "us_per_tick")
+
     payload = {
         "workload": {
             "legacy_cells": {"p_add": 0.3, "key_dist": "des"},
@@ -295,6 +334,9 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
                      "p_add": [0.3, 0.5, 0.7],
                      "key_dist": ["des", "uniform"],
                      "impls": [n for n, _ in grid_variants]},
+            # straight from the dist bench's own payload — the cell
+            # definition has one source of truth (dist_bench.CELLS)
+            "dist_cells": dist["meta"],
             "ticks": 20, "metric": "us_per_tick", "stat": "min_of_3",
             "driver": "tick_n_scan_for_pqe_and_sharded"},
         # trajectory anchors: seed/PR-1/PR-2 numbers on the p_add=0.3
@@ -336,6 +378,13 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
               f"noelim/elim="
               f"{cell['sharded_L8_noelim'] / cell['sharded_L8']:.2f}x"
               f"|hit_per_tick={payload['preroute_hit_per_tick'][cname]}")
+    for cname in dist_cells:
+        cell = payload["results"][cname]
+        _emit(f"smoke_dist_overhead_{cname}", 0.0,
+              f"dist_D8/local_L8="
+              f"{cell['dist_sharded_D8'] / cell['sharded_L8']:.2f}x"
+              f"|elim_win="
+              f"{cell['dist_sharded_D8_noelim'] / cell['dist_sharded_D8']:.2f}x")
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {out_path}")
 

@@ -1,8 +1,20 @@
 """Serving driver: batched requests through the PQ-scheduled engine.
 
-Requests arrive in waves with priorities (SLA classes); the scheduler's
-elimination fast-path admits urgent requests straight into free decode
-slots, while bulk arrivals are combined into the queue.
+Part 1 — single-device engine: requests arrive in waves with priorities
+(SLA classes); the scheduler's elimination fast-path admits urgent
+requests straight into free decode slots, while bulk arrivals are
+combined into the queue.
+
+Part 2 — mesh dispatch: the same admission problem at fleet scale.  A
+``DistShardedQueue`` (core/distributed.py: the sharded queue's lanes
+placed across every available device via shard_map) plays the cluster
+scheduler: each tick ingests a wave of prioritized requests and drains
+as many near-minimal ones as there are free worker slots.  Balanced
+waves exercise the device-local pre-route elimination pass (urgent
+arrivals matched straight to free slots, never touching routing or the
+interconnect).  Runs on 1 device as-is; the CI tests-multidev leg runs
+it with 8 forced host devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
     PYTHONPATH=src python examples/serve_requests.py
 """
@@ -11,6 +23,7 @@ import dataclasses
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import transformer as tf
@@ -59,5 +72,78 @@ def main() -> None:
         print(f"  {k:14s} {stats[k]}")
 
 
+def main_mesh() -> None:
+    """Fleet-scale dispatch: DistShardedQueue as the cluster scheduler."""
+    from repro.core import distributed as dq
+    from repro.core.config import EMPTY_VAL, PQConfig
+
+    n_devices = len(jax.devices())
+    W = 128                      # request-wave width (op batch per tick)
+    n_workers = 32               # decode slots freed (≈ served) per tick
+    base = PQConfig(a_max=W, r_max=W, seq_cap=1024, n_buckets=16,
+                    bucket_cap=64, detach_min=8, detach_max=256,
+                    detach_init=16, chop_patience=8)
+    q = dq.DistShardedQueue(
+        dq.make_dist_cfg(W, n_devices, 2, base=base))
+    state = q.init(seed=0)
+    print(f"\nmesh dispatch: {n_devices} device(s) x "
+          f"{q.cfg.lanes_per_device} lanes, wave width {W}, "
+          f"{n_workers} worker slots/tick")
+
+    rng = np.random.default_rng(0)
+    submitted = 0
+    dispatched = 0
+    urgent_submit = {}           # rid -> submit step
+    urgent_latency = []          # dispatch latency in ticks
+    clock = 0.0
+    for step in range(24):
+        # bulk arrivals: priority ~ deadline (DES hold model: a bit
+        # above the current virtual clock); arrival rate ~ service rate
+        # (the balanced regime where elimination thrives, and standing
+        # backlog stays inside lane capacity); an urgent SLA-0 request
+        # every 4th wave
+        n_bulk = int(rng.integers(n_workers // 2, 3 * n_workers // 2))
+        prio = clock + rng.exponential(50.0, n_bulk).astype(np.float32)
+        rid = np.arange(submitted, submitted + n_bulk, dtype=np.int32)
+        if step % 4 == 0:
+            urgent_id = submitted + n_bulk
+            prio = np.append(prio, np.float32(0.0))   # beats everything
+            rid = np.append(rid, np.int32(urgent_id))
+            urgent_submit[urgent_id] = step
+        submitted += len(rid)
+        ak = np.full((W,), np.inf, np.float32)
+        av = np.full((W,), EMPTY_VAL, np.int32)
+        mask = np.zeros((W,), bool)
+        ak[:len(rid)] = prio
+        av[:len(rid)] = rid
+        mask[:len(rid)] = True
+        state, res = q.tick(state, jnp.asarray(ak), jnp.asarray(av),
+                            jnp.asarray(mask), n_workers)
+        served = np.asarray(res.rm_served)
+        vals = np.asarray(res.rm_vals)[served]
+        dispatched += len(vals)
+        clock += n_workers * 50.0 / max(int(q.size(state)), 1)
+        for rid_ in vals:
+            if int(rid_) in urgent_submit:
+                urgent_latency.append(step - urgent_submit.pop(int(rid_)))
+
+    st = q.stats(state)
+    backlog = int(q.size(state))
+    assert dispatched + backlog == submitted, "request leak!"
+    print(f"submitted {submitted}, dispatched {dispatched}, "
+          f"backlog {backlog} (conserved)")
+    assert not urgent_submit, f"urgent requests stuck: {urgent_submit}"
+    # urgent requests dispatch within a tick of arrival (same tick once
+    # the queue carries a frontier; tick 0's empty queue makes EVERY add
+    # eligible, so slot-order elimination may serve 32 others first)
+    assert max(urgent_latency) <= 1, urgent_latency
+    print(f"urgent dispatch latency (ticks): {urgent_latency}")
+    print(f"pre-route eliminations (never routed): "
+          f"{int(st.n_preroute_elim)} over {int(st.n_ticks)} ticks "
+          f"(gate ema {float(st.elim_ema):.2f})")
+    print(f"lane backlog: {np.asarray(q.lane_sizes(state)).tolist()}")
+
+
 if __name__ == "__main__":
     main()
+    main_mesh()

@@ -5,11 +5,14 @@ Public API:
     FCPQ, ParallelPQ                    — the paper's baselines (§4)
     RefPQ                               — sequential specification (oracle)
     eliminate_batch                     — standalone elimination pass
-    make_distributed_tick               — shard_map distributed queue
     sharded (module)                    — L-lane vmapped relaxed queue
                                           (MultiQueues-style, c-relaxed
                                           removes, adaptive pre-route
                                           elimination; repro.core.sharded)
+    distributed (module)                — DistShardedQueue: the sharded
+                                          lanes placed across a device
+                                          mesh via shard_map (lanes-over-
+                                          devices; repro.core.distributed)
 """
 
 from repro.core.config import EMPTY_VAL, PQConfig, PRODUCTION, SMALL

@@ -1,347 +1,445 @@
-"""Distributed adaptive priority queue over a device mesh (DESIGN.md §3.4).
+"""Distributed sharded priority queue: lanes-over-devices via shard_map.
 
-The pod-scale realization of the paper's contention-reduction insight:
+This is the device-mesh port of :mod:`repro.core.sharded` (DESIGN.md
+§3.4).  The L lanes of one :class:`~repro.core.sharded.ShardedPQConfig`
+are placed across a D-device mesh as l = L / D device-local lanes; one
+:func:`repro.dist.sharding.shard_map` tick runs the same synchronized
+round the single-device queue runs, split into two planes:
 
-1. **Local elimination** — each device matches its own shard of adds and
-   removes against the *replicated* global minimum (`min_value` is part of
-   the replicated state, so a local match is globally valid: any add with
-   key <= global min may eliminate).  Every matched pair is traffic that
-   never reaches the interconnect — the ICI analogue of "eliminated
-   operations never touch the shared structure".
+* **Replicated control plane** — the stick-random router state (PRNG,
+  route permutation, its stable inverse), the adaptive pre-route
+  elimination pass and its controller EMAs, and the c-relaxed
+  min-of-lane-heads grant allocation are all tiny O(W)/O(L) scalar math
+  computed identically on every device from replicated inputs.  No
+  coordinator exists: every device *derives* the same global decisions.
+* **Device-sharded data plane** — the lanes themselves (every
+  ``PQState`` leaf, sharded on the leading lane axis) and the expensive
+  per-lane work: segment routing of the batch, the per-lane key sort,
+  and the PR-2 batch-cond-hoisted lane ticks
+  (:func:`repro.core.sharded._lanes_tick`, reused unchanged) run only
+  over the device's own l lanes.
 
-2. **Residual delegation** — surviving ops are all-gathered (the batch
-   analogue of posting to the elimination array for the server).
+The only per-tick collectives are two all-gathers of per-device lane
+summaries (head keys and sizes, O(L) scalars — equivalently a
+``lax.pmin`` for the bound alone), so interconnect traffic is
+independent of batch width, structure size, and tick payload:
 
-3. **Replicated combine** — every device deterministically applies the same
-   residual batch to its replica of the structure.  The paper's single
-   server thread would be a straggler at pod scale; replicating the combine
-   trades (cheap) duplicate compute for zero additional communication, and
-   keeps the structure consistent without a coordinator.  This is a
-   deliberate beyond-paper change, recorded in EXPERIMENTS.md §Perf.
+* the **exact min-of-lane-heads bound** is the min of the gathered
+  heads, so the c-relaxation contract (``sharded.relax_bound`` with the
+  full L = D * l) is identical to single-device;
+* **pre-route elimination** runs device-locally against that replicated
+  global bound — matched pairs are served straight from the replicated
+  batch and never touch the interconnect;
+* **grants** come from the same replicated
+  :func:`~repro.core.sharded._alloc_removes_arrays` allocation over the
+  gathered [L] summaries; each device slices its own lanes' grants;
+* **removeMin results assemble without a coordinator**: every lane
+  serves a dense prefix of its result row, so the global compacted
+  stream is ragged-segment arithmetic over the lane counts
+  (:func:`~repro.core.sharded._fold_results`) — the lane segments land
+  at the exclusive prefix over per-device serve counts.
 
-4. Each device slices its own removals out of the global residual stream by
-   exclusive prefix over per-device residual remove counts.
+Because every per-lane computation is bit-identical to the
+single-device queue's (the batch-level cond hoists are
+performance-only; see tests/test_tick_repairs.py), a
+``DistShardedQueue`` over D devices serves the same stream as
+single-device ``sharded`` with L = D * l lanes on the same op stream —
+pinned per tick by tests/test_dist_sharded.py and the CI
+``tests-multidev`` leg.
 
-The V2 variant (:func:`make_distributed_tick_v2`) shards the PARALLEL part
-across devices — the paper's disjoint-access parallelism at pod scale:
-structure capacity grows linearly with devices, scatter work divides by
-ndev, and moveHead gathers only per-device candidate prefixes.  Service is
-lazy-refill (a tick that drains the head serves the shortfall next tick),
-matching the paper's per-op moveHead shape.
+This module replaced the seed-era v1 (replicated combine over one
+global pqueue tick) and v2 (device-sharded parallel part) distributed
+ticks, which ran the pre-PR-2 tick and funneled every surviving op
+through an O(W)-payload all-gather; see DESIGN.md §3.4 for the
+collective cost comparison.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import pqueue
+from repro.core import sharded
 from repro.core.config import EMPTY_VAL, PQConfig
-from repro.core.elimination import eliminate_batch
-from repro.core.pqueue import INF, PQState, TickResult
+from repro.core.sharded import ShardedPQConfig, ShardedState, ShardedTickResult
+from repro.dist.sharding import shard_map
 
+INF = jnp.inf
 _I32 = jnp.int32
-
-
-def _axis_size(axis: str):
-    """Mapped-axis size as a static int; jax.lax.axis_size only exists on
-    newer jax.  psum of a Python literal folds to a concrete int because
-    mapped-axis sizes are static."""
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(axis)
-    return jax.lax.psum(1, axis)
 _F32 = jnp.float32
 
 
-def local_tick(cfg: PQConfig, state: PQState, add_keys, add_vals, add_mask,
-               rm_count, axis: str,
-               eliminate: bool = True) -> Tuple[PQState, TickResult]:
-    """Per-device body of the distributed tick (runs under shard_map).
+@dataclasses.dataclass(frozen=True)
+class DistShardedPQConfig:
+    """Static config of the lanes-over-devices queue.
 
-    `state` is replicated; op arrays are the device-local shard with
-    ``a_max``/``r_max`` sized per device.  ``eliminate=False`` disables the
-    local elimination pass (the flat-combining-only ablation: every op is
-    delegated over the interconnect — used by the benchmarks to quantify
-    elimination's collective-byte savings).
+    ``shard`` is the GLOBAL single-device-equivalent config: its
+    ``n_lanes`` is the total L = n_devices * lanes_per_device, and its
+    batch geometry (``a_total``) is the un-sharded op-batch width.  The
+    equivalence contract is stated against ``sharded`` running this
+    exact config on one device.
     """
-    ndev = _axis_size(axis)
+
+    shard: ShardedPQConfig
+    n_devices: int
+    axis: str = "data"
+
+    def __post_init__(self) -> None:
+        if self.n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if self.shard.n_lanes % self.n_devices:
+            raise ValueError(
+                f"n_lanes ({self.shard.n_lanes}) must divide evenly "
+                f"across n_devices ({self.n_devices})"
+            )
+
+    @property
+    def lanes_per_device(self) -> int:
+        return self.shard.n_lanes // self.n_devices
+
+    # duck-typed batch geometry, same contract as ShardedPQConfig
+    @property
+    def a_max(self) -> int:
+        return self.shard.a_total
+
+    @property
+    def r_max(self) -> int:
+        return self.shard.a_total
+
+
+def make_dist_cfg(
+    width: int,
+    n_devices: int,
+    lanes_per_device: int,
+    *,
+    base: PQConfig,
+    slack: float = 1.0,
+    preroute: str = "adaptive",
+    axis: str = "data",
+) -> DistShardedPQConfig:
+    """Scale a width-`width` single-queue config onto a D-device mesh.
+
+    Per-lane geometry comes from :func:`sharded.make_sharded_cfg` with
+    L = n_devices * lanes_per_device total lanes, so dist(D, l) and
+    single-device sharded(L = D * l) share one config modulo placement.
+    """
+    scfg = sharded.make_sharded_cfg(
+        width,
+        n_devices * lanes_per_device,
+        base=base,
+        slack=slack,
+        preroute=preroute,
+    )
+    return DistShardedPQConfig(shard=scfg, n_devices=n_devices, axis=axis)
+
+
+def _state_specs(axis: str) -> ShardedState:
+    """shard_map pytree-prefix specs: lanes sharded on the leading lane
+    axis, every control-plane leaf replicated."""
+    return ShardedState(
+        lanes=P(axis),
+        rng=P(),
+        route=P(),
+        route_inv=P(),
+        tick_idx=P(),
+        n_router_dropped=P(),
+        elim_ema=P(),
+        balance_ema=P(),
+        n_preroute_elim=P(),
+        n_preroute_ticks=P(),
+    )
+
+
+def default_mesh(cfg: DistShardedPQConfig) -> Mesh:
+    """1-D mesh over the first ``cfg.n_devices`` local devices."""
+    devs = jax.devices()
+    if len(devs) < cfg.n_devices:
+        raise ValueError(
+            f"need {cfg.n_devices} devices, have {len(devs)} — force "
+            "host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
+    return Mesh(np.asarray(devs[: cfg.n_devices]), (cfg.axis,))
+
+
+def init(cfg: DistShardedPQConfig, mesh: Mesh, *, seed: int = 0) -> ShardedState:
+    """Queue state placed on the mesh: the pytree is bit-identical to
+    ``sharded.init(cfg.shard, seed=seed)`` — only the sharding differs
+    (lanes split over devices, control plane replicated), so every
+    ``sharded`` introspection helper (stats/size/lane_sizes) works on
+    it unchanged."""
+    state = sharded.init(cfg.shard, seed=seed)
+    placement = ShardedState(
+        lanes=NamedSharding(mesh, P(cfg.axis)),
+        rng=NamedSharding(mesh, P()),
+        route=NamedSharding(mesh, P()),
+        route_inv=NamedSharding(mesh, P()),
+        tick_idx=NamedSharding(mesh, P()),
+        n_router_dropped=NamedSharding(mesh, P()),
+        elim_ema=NamedSharding(mesh, P()),
+        balance_ema=NamedSharding(mesh, P()),
+        n_preroute_elim=NamedSharding(mesh, P()),
+        n_preroute_ticks=NamedSharding(mesh, P()),
+    )
+    return jax.device_put(state, placement)
+
+
+def _dist_tick_body(
+    scfg: ShardedPQConfig,
+    n_local: int,
+    axis: str,
+    state: ShardedState,
+    add_keys,
+    add_vals,
+    add_mask,
+    rm_count,
+):
+    """Per-device body (under shard_map): the sharded tick with the lane
+    axis cut to this device's ``n_local`` lanes.
+
+    Mirrors :func:`sharded._tick_impl` stage by stage; every replicated
+    value is computed identically on all devices (no collective), and
+    the two all-gathers below are the tick's entire interconnect
+    footprint.  Collectives sit OUTSIDE every data-dependent cond — a
+    device-varying predicate around a collective would deadlock the
+    SPMD program.
+    """
+    L = scfg.n_lanes
+    lc = scfg.lane
+    rl = lc.r_max
+    w = add_keys.shape[0]
+    out_w = max(w, L * rl)
+    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), out_w)
     my = jax.lax.axis_index(axis)
-    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), cfg.r_max)
+    lane_lo = my.astype(_I32) * n_local
+    local = state.lanes  # PQState stack, leaves lead-dim n_local
 
-    # ---- 1. local elimination against the replicated global minimum ----
-    min_for_elim = state.min_value if eliminate else jnp.asarray(-INF)
-    er = eliminate_batch(add_keys, add_vals, add_mask, rm_count,
-                         min_for_elim)
+    # -- the tick's only collectives: per-device lane summaries -> the
+    # replicated [L] vectors behind the global bound and the grant
+    # allocation (O(L) scalars, independent of batch width) --
+    min_v = jax.lax.all_gather(local.min_value, axis).reshape(-1)
+    sizes_loc = local.seq_len + local.par_count
+    sizes_pre = jax.lax.all_gather(sizes_loc, axis).reshape(-1)
+    union_min = jnp.min(min_v)
 
-    # ---- 2. delegate residuals: all-gather surviving adds + rm counts ----
-    res_keys = jax.lax.all_gather(er.residual_keys, axis)   # [ndev, a_max]
-    res_vals = jax.lax.all_gather(er.residual_vals, axis)
-    res_rm = jax.lax.all_gather(er.residual_rm, axis)       # [ndev]
+    # -- pre-route elimination, device-local against the replicated
+    # global bound: matched pairs are served from the replicated batch
+    # and never touch the interconnect --
+    n_adds_in = add_mask.sum(dtype=_I32)
+    (
+        add_keys,
+        add_vals,
+        add_mask,
+        rm_residual,
+        matched_k,
+        matched_v,
+        n_matched,
+        elim_ran,
+    ) = sharded._preroute_eliminate(
+        scfg, state, add_keys, add_vals, add_mask, rm_count, union_min=union_min
+    )
+    elim_ema, balance_ema = sharded._controller_update(
+        scfg, state, n_adds_in, rm_count, n_matched, elim_ran
+    )
 
-    g_keys = res_keys.reshape(-1)
-    g_vals = res_vals.reshape(-1)
-    g_mask = g_keys < INF
-    g_rm = res_rm.sum(dtype=_I32)
+    # -- stick-random router refresh: replicated PRNG math, identical
+    # on every device (same key -> same permutation) --
+    resample = (state.tick_idx % scfg.stick) == 0
 
-    # ---- 3. replicated combine: identical tick on every device ----
-    # The inner tick's batch geometry is ndev * a_max / ndev * r_max.
-    gcfg = _global_cfg(cfg, int(ndev) if isinstance(ndev, int) else None)
-    new_state, gres = pqueue.tick(gcfg, state, g_keys, g_vals, g_mask, g_rm)
+    def _resample(k):
+        k2, sub = jax.random.split(k)
+        fresh = sharded._fresh_route(sub, w, L)
+        return k2, fresh, jnp.argsort(fresh, stable=True).astype(_I32)
 
-    # account locally-eliminated pairs in the replicated stats (identical on
-    # every device after the psum, so the state stays replicated);
-    # local_elim tracks wire avoidance separately from in-structure elims
-    n_local_elim = jax.lax.psum(er.n_matched, axis)
-    new_state = new_state._replace(stats=new_state.stats._replace(
-        add_imm_elim=new_state.stats.add_imm_elim + n_local_elim,
-        n_removes=new_state.stats.n_removes + n_local_elim,
-        local_elim=new_state.stats.local_elim + n_local_elim))
+    def _keep(k):
+        return k, state.route, state.route_inv
 
-    # ---- 4. slice my removals: my locally-eliminated + my residual share --
-    offset = jnp.where(jnp.arange(res_rm.shape[0], dtype=_I32) < my,
-                       res_rm, 0).sum(dtype=_I32)
-    ridx = jnp.arange(cfg.r_max, dtype=_I32)
-    n_loc = er.n_matched
-    # first n_loc slots: locally eliminated values; rest: residual stream
-    gidx = jnp.clip(offset + ridx - n_loc, 0, gres.rm_keys.shape[0] - 1)
-    rm_keys = jnp.where(ridx < n_loc,
-                        er.matched_keys[jnp.clip(ridx, 0, cfg.a_max - 1)],
-                        gres.rm_keys[gidx])
-    rm_vals = jnp.where(ridx < n_loc,
-                        er.matched_vals[jnp.clip(ridx, 0, cfg.a_max - 1)],
-                        gres.rm_vals[gidx])
-    requested = ridx < rm_count
-    rm_keys = jnp.where(requested, rm_keys, INF)
-    rm_vals = jnp.where(requested, rm_vals, EMPTY_VAL)
-    rm_served = requested & (rm_keys < INF)
-    return new_state, TickResult(rm_keys, rm_vals, rm_served)
+    key, route, route_inv = jax.lax.cond(resample, _resample, _keep, state.rng)
+
+    # -- replicated routing summary (counting only — actual routing of
+    # the batch happens device-locally under the lane-work cond): live
+    # adds per lane feed grant `incoming` and the drop counter --
+    counts = sharded._route_counts(scfg, route_inv, add_mask)
+    incoming = jnp.minimum(counts, lc.a_max)
+    n_drop = jnp.sum(jnp.maximum(counts - lc.a_max, 0), dtype=_I32)
+
+    # -- replicated grant allocation over the gathered summaries; each
+    # device slices its own lanes' grants (exclusive prefix of the lane
+    # axis = this device's window).  The incoming-aware variant only
+    # exists under the lane-work cond (matching sharded._tick_impl) --
+    grants0 = sharded._alloc_removes_arrays(
+        scfg, sizes_pre, min_v, rm_residual, incoming=0
+    )
+    my_counts = jax.lax.dynamic_slice_in_dim(counts, lane_lo, n_local, 0)
+    my_grants0 = jax.lax.dynamic_slice_in_dim(grants0, lane_lo, n_local, 0)
+
+    # -- device-local lane-work hoist: unlike the single-device queue's
+    # global any, each device skips on ITS lanes' predicate alone (a
+    # mesh neighbor's work is not ours).  Bit-exactness of skip vs run
+    # for a no-work lane is the PR-2/PR-3 guarantee pinned by
+    # tests/test_tick_repairs.py; a grant can never appear on a lane
+    # whose grants0 slice was zero without incoming on that same lane
+    # (others' incoming only pushes a lane's head rank back), so the
+    # predicate is a sound superset --
+    quiet1 = local.quiet_ticks + 1
+    my_chop = jnp.any((quiet1 >= lc.chop_patience) & (local.seq_len > 0))
+    has_adds = my_counts.sum(dtype=_I32) > 0
+    has_grants = my_grants0.sum(dtype=_I32) > 0
+    lane_work = has_adds | has_grants | my_chop
+
+    def _do(lanes_in):
+        lk, lv, lm, _ = sharded._route_adds_sorted(
+            scfg, route_inv, add_keys, add_vals, add_mask, rows=(lane_lo, n_local)
+        )
+        grants = sharded._alloc_removes_arrays(
+            scfg, sizes_pre, min_v, rm_residual, incoming=incoming
+        )
+        my_grants = jax.lax.dynamic_slice_in_dim(grants, lane_lo, n_local, 0)
+        lanes2, res, n_lane = sharded._lanes_tick(
+            lc, lanes_in, lk, lv, lm, my_grants, adds_sorted=True
+        )
+        return lanes2, res.rm_keys, res.rm_vals, n_lane
+
+    def _skip(lanes_in):
+        st = lanes_in.stats
+        lanes2 = lanes_in._replace(
+            quiet_ticks=quiet1, stats=st._replace(n_ticks=st.n_ticks + 1)
+        )
+        return (
+            lanes2,
+            jnp.full((n_local, rl), INF, _F32),
+            jnp.full((n_local, rl), EMPTY_VAL, _I32),
+            jnp.zeros((n_local,), _I32),
+        )
+
+    lanes2, res_k, res_v, n_lane = jax.lax.cond(lane_work, _do, _skip, local)
+
+    new_state = ShardedState(
+        lanes=lanes2,
+        rng=key,
+        route=route,
+        route_inv=route_inv,
+        tick_idx=state.tick_idx + 1,
+        n_router_dropped=state.n_router_dropped + n_drop,
+        elim_ema=elim_ema,
+        balance_ema=balance_ema,
+        n_preroute_elim=state.n_preroute_elim + n_matched,
+        n_preroute_ticks=state.n_preroute_ticks + elim_ran.astype(_I32),
+    )
+    return new_state, (matched_k, matched_v, n_matched, res_k, res_v, n_lane)
 
 
-@functools.lru_cache(maxsize=None)
-def _global_cfg_cached(cfg: PQConfig, ndev: int) -> PQConfig:
-    import dataclasses
-    return dataclasses.replace(cfg, a_max=cfg.a_max * ndev,
-                               r_max=cfg.r_max * ndev,
-                               seq_cap=max(cfg.seq_cap,
-                                           (cfg.a_max + cfg.r_max) * ndev
-                                           + cfg.seq_cap))
+def _make_mapped(cfg: DistShardedPQConfig, mesh: Mesh):
+    body = functools.partial(
+        _dist_tick_body, cfg.shard, cfg.lanes_per_device, cfg.axis
+    )
+    sspec = _state_specs(cfg.axis)
+    lane_res = (P(), P(), P(), P(cfg.axis), P(cfg.axis), P(cfg.axis))
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(sspec, P(), P(), P(), P()),
+        out_specs=(sspec, lane_res),
+    )
 
 
-def _global_cfg(cfg: PQConfig, ndev) -> PQConfig:
-    if ndev is None:
-        raise ValueError("device count must be static under shard_map")
-    return _global_cfg_cached(cfg, ndev)
+def make_dist_tick(cfg: DistShardedPQConfig, mesh: Mesh):
+    """Jitted one-round tick over the mesh; same signature and result
+    type as ``sharded.tick`` (state is DONATED)."""
+    mapped = _make_mapped(cfg, mesh)
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def dist_tick(
+        state: ShardedState, add_keys, add_vals, add_mask, rm_count
+    ) -> Tuple[ShardedState, ShardedTickResult]:
+        new_state, parts = mapped(
+            state, add_keys, add_vals, add_mask, jnp.asarray(rm_count, _I32)
+        )
+        mk, mv, nm, rk, rv, nl = parts
+        return new_state, sharded._fold_results(nm, mk, mv, rk, rv, nl)
+
+    return dist_tick
 
 
-def make_distributed_tick(cfg: PQConfig, mesh, axis: str = "data",
-                          eliminate: bool = True):
-    """Builds a jitted distributed tick over `mesh[axis]`.
+def make_dist_tick_n(cfg: DistShardedPQConfig, mesh: Mesh):
+    """`lax.scan` multi-tick driver over [T, ...]-stacked op batches
+    (one dispatch for T synchronized rounds; state is DONATED) — the
+    bench driver, mirroring ``sharded.tick_n``."""
+    mapped = _make_mapped(cfg, mesh)
 
-    The state uses the *global* config (batch geometry scaled by device
-    count); ops are sharded over `axis`; state is replicated.
+    @functools.partial(jax.jit, donate_argnums=0)
+    def dist_tick_n(state: ShardedState, add_keys, add_vals, add_mask, rm_counts):
+        def step(s, xs):
+            ak, av, am, rm = xs
+            s2, parts = mapped(s, ak, av, am, rm)
+            mk, mv, nm, rk, rv, nl = parts
+            return s2, sharded._fold_results(nm, mk, mv, rk, rv, nl)
+
+        xs = (add_keys, add_vals, add_mask, jnp.asarray(rm_counts, _I32))
+        return jax.lax.scan(step, state, xs)
+
+    return dist_tick_n
+
+
+class DistShardedQueue:
+    """Lanes-over-devices sharded queue (module docstring has the
+    design; DESIGN.md §3.4 the cost model).
+
+    Bundles a config, a mesh, and the jitted tick/tick_n closures; the
+    state stays explicit and flows through ``tick`` functionally, like
+    every other queue in the repo::
+
+        q = DistShardedQueue(make_dist_cfg(256, n_devices=8,
+                                           lanes_per_device=2, base=cfg))
+        state = q.init(seed=0)
+        state, res = q.tick(state, keys, vals, mask, rm_count)
+
+    ``tick`` donates ``state``; results are near-minimal key sets under
+    ``q.relax_bound(rm_count)`` with L = D * l, exactly as single-device
+    ``sharded`` — the two serve the same stream on the same ops.
     """
-    ndev = mesh.shape[axis]
-    gcfg = _global_cfg(cfg, ndev)
 
-    def body(state, add_keys, add_vals, add_mask, rm_count):
-        return local_tick(cfg, state, add_keys, add_vals, add_mask,
-                          rm_count[0], axis, eliminate=eliminate)
+    def __init__(self, cfg: DistShardedPQConfig, mesh: Optional[Mesh] = None):
+        if mesh is None:
+            mesh = default_mesh(cfg)
+        if mesh.shape[cfg.axis] != cfg.n_devices:
+            raise ValueError(
+                f"mesh axis {cfg.axis!r} has {mesh.shape[cfg.axis]} "
+                f"devices, config wants {cfg.n_devices}"
+            )
+        self.cfg = cfg
+        self.mesh = mesh
+        self._tick = make_dist_tick(cfg, mesh)
+        self._tick_n = make_dist_tick_n(cfg, mesh)
 
-    from repro.dist.sharding import shard_map
-    mapped = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(axis)))
-    return gcfg, jax.jit(mapped)
+    def init(self, *, seed: int = 0) -> ShardedState:
+        return init(self.cfg, self.mesh, seed=seed)
 
+    def tick(
+        self, state: ShardedState, add_keys, add_vals, add_mask, rm_count
+    ) -> Tuple[ShardedState, ShardedTickResult]:
+        return self._tick(state, add_keys, add_vals, add_mask, rm_count)
 
-def init_distributed(cfg: PQConfig, mesh, axis: str = "data") -> PQState:
-    ndev = mesh.shape[axis]
-    return pqueue.init(_global_cfg(cfg, ndev))
+    def tick_n(
+        self, state: ShardedState, add_keys, add_vals, add_mask, rm_counts
+    ) -> Tuple[ShardedState, ShardedTickResult]:
+        return self._tick_n(state, add_keys, add_vals, add_mask, rm_counts)
 
+    def stats(self, state: ShardedState) -> sharded.ShardedStats:
+        return sharded.stats(state)
 
-# ---------------------------------------------------------------------------
-# V2: device-sharded parallel part (the paper's disjoint-access parallelism
-# at pod scale — structure capacity grows linearly with devices)
-# ---------------------------------------------------------------------------
+    def size(self, state: ShardedState) -> jnp.ndarray:
+        return sharded.size(state)
 
-class DistState(NamedTuple):
-    """V2 state: replicated head + per-device parallel part.
+    def lane_sizes(self, state: ShardedState) -> jnp.ndarray:
+        return sharded.lane_sizes(state)
 
-    `rep` is the replicated PQState whose OWN parallel part stays empty;
-    `par` is this device's shard of the parallel part (hash-of-value
-    ownership — load-balanced, and moveHead correctness does not depend on
-    ranges because candidates are gathered from every owner).
-    """
-    rep: PQState
-    par: pqueue.ParPart
-
-
-def init_distributed_v2(cfg: PQConfig, mesh, axis: str = "data"):
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    ndev = mesh.shape[axis]
-    gcfg = _global_cfg(cfg, ndev)
-    rep = pqueue.init(gcfg)
-
-    def one_par(_):
-        st = pqueue.init(cfg)
-        return pqueue._par_of(st)
-
-    pars = jax.vmap(one_par)(jnp.arange(ndev))
-    par = jax.device_put(pars, NamedSharding(mesh, P(axis)))
-    return DistState(rep=rep, par=par)
-
-
-def local_tick_v2(cfg: PQConfig, state: DistState, add_keys, add_vals,
-                  add_mask, rm_count, axis: str):
-    """V2 body (under shard_map): like V1 but large-key adds scatter into
-    the DEVICE-LOCAL parallel shard (owner = hash(val) — the residual
-    gather already made all adds visible everywhere, so ownership is a
-    mask, not a route), and moveHead gathers per-device candidate prefixes
-    instead of whole structures."""
-    ndev = _axis_size(axis)
-    my = jax.lax.axis_index(axis)
-    rep = state.rep
-    par = jax.tree.map(lambda x: x[0], state.par)  # drop shard_map lead dim
-    rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), cfg.r_max)
-
-    # 1. local elimination (identical to V1)
-    er = eliminate_batch(add_keys, add_vals, add_mask, rm_count,
-                         rep.min_value)
-
-    # 2. residual delegation
-    res_keys = jax.lax.all_gather(er.residual_keys, axis)
-    res_vals = jax.lax.all_gather(er.residual_vals, axis)
-    res_rm = jax.lax.all_gather(er.residual_rm, axis)
-    g_keys = res_keys.reshape(-1)
-    g_vals = res_vals.reshape(-1)
-    g_rm = res_rm.sum(dtype=_I32)
-
-    # 3. split: small keys -> the replicated combine; large keys -> MY
-    #    shard of the parallel part (ownership mask by hash of value)
-    small = (g_keys <= rep.last_seq) & (g_keys < INF)
-    mine = ((g_vals % ndev) == my) & ~small & (g_keys < INF)
-    par, _, _ = pqueue.scatter_parallel(
-        cfg, par, jnp.where(mine, g_keys, INF),
-        jnp.where(mine, g_vals, EMPTY_VAL))
-
-    # 4. replicated combine over the sequential part only (small adds +
-    #    removes); shortfall triggers the distributed moveHead below
-    gcfg = _global_cfg(cfg, int(ndev) if isinstance(ndev, int) else None)
-    small_keys = jnp.where(small, g_keys, INF)
-    small_vals = jnp.where(small, g_vals, EMPTY_VAL)
-    # the replicated PQState's own parallel part is EMPTY by construction:
-    # every large add went to a device shard, so tick()'s internal
-    # emergency path would find nothing — handle shortfall ourselves
-    # pqueue.tick donates its state argument: snapshot the counter the
-    # shortfall check needs BEFORE the call (safe under shard_map tracing
-    # where donation is ignored, AND under any future eager use)
-    rm_empty_before = rep.stats.rm_empty
-    new_rep, gres = pqueue.tick(gcfg, rep, small_keys, small_vals,
-                                small, g_rm)
-
-    # 5. distributed moveHead: if the head drained (or ran short), gather
-    #    per-device candidate prefixes and rebuild the replicated head
-    shortfall = (new_rep.stats.rm_empty - rm_empty_before) > 0
-    need = (new_rep.seq_len <= 0) & ((g_rm > 0) | shortfall)
-
-    def do_move(par, new_rep):
-        k = jnp.maximum(new_rep.detach_n, g_rm)
-        fk, fv = pqueue.flatten_parallel(cfg, par)
-        cand_k = fk[: cfg.detach_max]
-        cand_v = fv[: cfg.detach_max]
-        all_k = jax.lax.all_gather(cand_k, axis).reshape(-1)
-        all_v = jax.lax.all_gather(cand_v, axis).reshape(-1)
-        order = jnp.argsort(all_k)
-        all_k, all_v = all_k[order], all_v[order]
-        take = jnp.minimum(k, jnp.sum(all_k < INF, dtype=_I32))
-        take = jnp.minimum(take, new_rep.seq_keys.shape[0])
-        sel = jnp.arange(all_k.shape[0], dtype=_I32) < take
-        # rebuild the replicated head from the global prefix (padded)
-        sc = new_rep.seq_keys.shape[0]
-        sk = pqueue._take_window(jnp.where(sel, all_k, INF), 0, sc, INF)
-        sv = pqueue._take_window(jnp.where(sel, all_v, EMPTY_VAL), 0, sc,
-                                 EMPTY_VAL)
-        moved = DistStateMove(sk, sv, take)
-        # drop MY contributed candidates that made the global prefix
-        taken_mine = sel & ((all_v % ndev) == my) & (all_k < INF)
-        n_mine = jnp.sum(taken_mine, dtype=_I32)
-        rk = pqueue._shift_left(fk, n_mine, INF)
-        rv = pqueue._shift_left(fv, n_mine, EMPTY_VAL)
-        newpar, _ = pqueue._redistribute(cfg, rk, rv,
-                                         par.par_count - n_mine)
-        return newpar, moved
-
-    def no_move(par, new_rep):
-        sc = new_rep.seq_keys.shape[0]
-        return par, DistStateMove(jnp.full((sc,), INF, _F32),
-                                  jnp.full((sc,), EMPTY_VAL, _I32),
-                                  jnp.zeros((), _I32))
-
-    par, moved = jax.lax.cond(need, do_move, no_move, par, new_rep)
-    new_rep = jax.lax.cond(
-        need,
-        lambda r: r._replace(
-            seq_keys=moved.keys, seq_vals=moved.vals, seq_len=moved.n,
-            last_seq=jnp.where(
-                moved.n > 0,
-                moved.keys[jnp.clip(moved.n - 1, 0,
-                                    moved.keys.shape[0] - 1)], -INF),
-            min_value=jnp.where(moved.n > 0, moved.keys[0], INF)),
-        lambda r: r, new_rep)
-    # global min across shards (parallel part lives on devices now)
-    par_min_global = jax.lax.pmin(par.par_min, axis)
-    new_rep = new_rep._replace(
-        min_value=jnp.minimum(new_rep.min_value, par_min_global))
-
-    # 6. my removals: local eliminations first, then my residual slice
-    offset = jnp.where(jnp.arange(res_rm.shape[0], dtype=_I32) < my,
-                       res_rm, 0).sum(dtype=_I32)
-    ridx = jnp.arange(cfg.r_max, dtype=_I32)
-    n_loc = er.n_matched
-    gidx = jnp.clip(offset + ridx - n_loc, 0, gres.rm_keys.shape[0] - 1)
-    rm_keys = jnp.where(ridx < n_loc,
-                        er.matched_keys[jnp.clip(ridx, 0, cfg.a_max - 1)],
-                        gres.rm_keys[gidx])
-    rm_vals = jnp.where(ridx < n_loc,
-                        er.matched_vals[jnp.clip(ridx, 0, cfg.a_max - 1)],
-                        gres.rm_vals[gidx])
-    requested = ridx < rm_count
-    rm_keys = jnp.where(requested, rm_keys, INF)
-    rm_vals = jnp.where(requested, rm_vals, EMPTY_VAL)
-    par_out = jax.tree.map(lambda x: x[None], par)  # restore lead dim
-    return (DistState(rep=new_rep, par=par_out),
-            TickResult(rm_keys, rm_vals, requested & (rm_keys < INF)))
-
-
-class DistStateMove(NamedTuple):
-    keys: jnp.ndarray
-    vals: jnp.ndarray
-    n: jnp.ndarray
-
-
-def make_distributed_tick_v2(cfg: PQConfig, mesh, axis: str = "data"):
-    """V2: sharded parallel part. Capacity = ndev × par_cap; scatter work
-    per device divides by ndev; moveHead gathers only candidate prefixes
-    (detach_max keys/device) instead of whole structures."""
-    from jax.sharding import PartitionSpec as P
-    ndev = mesh.shape[axis]
-    gcfg = _global_cfg(cfg, ndev)
-
-    def body(state, add_keys, add_vals, add_mask, rm_count):
-        return local_tick_v2(cfg, state, add_keys, add_vals, add_mask,
-                             rm_count[0], axis)
-
-    from repro.dist.sharding import shard_map
-    par_spec = pqueue.ParPart(*(P(axis),) * 6)
-    state_spec = DistState(rep=jax.tree.map(lambda _: P(), pqueue.init(
-        gcfg)), par=par_spec)
-    mapped = shard_map(
-        body, mesh=mesh,
-        in_specs=(state_spec, P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(state_spec, P(axis)))
-    return gcfg, jax.jit(mapped)
+    def relax_bound(self, rm_count: int) -> int:
+        return sharded.relax_bound(self.cfg.shard, rm_count)

@@ -66,8 +66,11 @@ class PQStats(NamedTuple):
     n_dropped: jnp.ndarray      # items dropped at total-capacity (should be 0)
     n_ticks: jnp.ndarray
     n_removes: jnp.ndarray      # total removeMin requests (for Table 1 ratios)
-    local_elim: jnp.ndarray     # distributed only: pairs matched BEFORE the
-                                # interconnect (wire-avoidance metric)
+    local_elim: jnp.ndarray     # wire-avoidance metric of the retired v1
+                                # distributed tick (the lanes-over-devices
+                                # queue counts pre-interconnect matches in
+                                # ShardedStats.n_preroute_elim instead);
+                                # kept so stats pytrees stay stable
 
     @staticmethod
     def zeros() -> "PQStats":

@@ -254,8 +254,36 @@ def _route_adds(cfg: ShardedPQConfig, route, add_keys, add_vals, add_mask):
     return lk, lv, taken, n_in - n_routed
 
 
+def _route_geometry(w: int, n_lanes: int):
+    """Static segment geometry of the balanced pattern ``arange(w) % L``:
+    per-lane window indices into ``route_inv`` ([L, smax]) and the pad
+    mask of slots past each lane's (static) segment length."""
+    cnts = [(w + n_lanes - 1 - l) // n_lanes for l in range(n_lanes)]
+    smax = max(cnts)
+    offs, acc = [], 0
+    for c in cnts:
+        offs.append(acc)
+        acc += c
+    idx = (jnp.asarray(offs, _I32)[:, None]
+           + jnp.arange(smax, dtype=_I32)[None, :])        # [L, smax]
+    pad = jnp.arange(smax, dtype=_I32)[None, :] >= jnp.asarray(cnts,
+                                                               _I32)[:, None]
+    return idx, pad
+
+
+def _route_counts(cfg: ShardedPQConfig, route_inv, add_mask):
+    """[L] live adds per lane under the current route — pure replicated
+    math on the (replicated) route and mask, used by the distributed
+    queue to compute grant `incoming` without waiting on routing."""
+    w = add_mask.shape[0]
+    idx, pad = _route_geometry(w, cfg.n_lanes)
+    src = route_inv[jnp.clip(idx, 0, w - 1)]
+    live = ~pad & add_mask[src]
+    return jnp.sum(live, axis=-1, dtype=_I32)
+
+
 def _route_adds_sorted(cfg: ShardedPQConfig, route_inv, add_keys,
-                       add_vals, add_mask):
+                       add_vals, add_mask, rows=None):
     """Fused router + per-lane sort via resample-amortized grouping.
 
     ``route_inv`` (stable argsort of the route, refreshed only when the
@@ -270,21 +298,23 @@ def _route_adds_sorted(cfg: ShardedPQConfig, route_inv, add_keys,
     tests/test_tick_repairs.py).  Returns per-lane [L, a_lane] arrays
     ready for ``_tick_head(..., adds_sorted=True)``, plus the dropped
     count (elements past a lane's quota; zero at slack >= 1).
+
+    ``rows=(lane_lo, n_rows)`` restricts the route/sort to a window of
+    ``n_rows`` consecutive lanes starting at (traced) lane ``lane_lo``
+    — each device of the distributed queue routes and sorts ONLY its
+    own lanes' segments of the replicated batch.  Row results are
+    identical to the full-batch call's rows (the per-row sort is
+    row-independent), which is what keeps dist == single-device exact.
     """
     L, al = cfg.n_lanes, cfg.lane.a_max
     w = add_keys.shape[0]
-    # static segment geometry of the balanced pattern arange(w) % L
-    cnts = [(w + L - 1 - l) // L for l in range(L)]
-    smax = max(cnts)
-    offs, acc = [], 0
-    for c in cnts:
-        offs.append(acc)
-        acc += c
-    idx = (jnp.asarray(offs, _I32)[:, None]
-           + jnp.arange(smax, dtype=_I32)[None, :])        # [L, smax]
-    pad = jnp.arange(smax, dtype=_I32)[None, :] >= jnp.asarray(cnts,
-                                                               _I32)[:, None]
-    src = route_inv[jnp.clip(idx, 0, w - 1)]               # [L, smax] slots
+    idx, pad = _route_geometry(w, L)                       # [L, smax]
+    if rows is not None:
+        lane_lo, n_rows = rows
+        idx = jax.lax.dynamic_slice_in_dim(idx, lane_lo, n_rows, 0)
+        pad = jax.lax.dynamic_slice_in_dim(pad, lane_lo, n_rows, 0)
+    smax = idx.shape[1]
+    src = route_inv[jnp.clip(idx, 0, w - 1)]               # [rows, smax]
     live = ~pad & add_mask[src]
     ck = jnp.where(live, add_keys[src].astype(_F32), INF)
     cv = jnp.where(live, add_vals[src].astype(_I32), EMPTY_VAL)
@@ -324,11 +354,22 @@ def _alloc_removes(cfg: ShardedPQConfig, lanes: pqueue.PQState, rm_count,
     never drain — and kept every lane's combine/scatter/repair passes
     firing on every steady-state tick.
     """
-    L = cfg.n_lanes
+    return _alloc_removes_arrays(
+        cfg, lanes.seq_len + lanes.par_count, lanes.min_value, rm_count,
+        incoming)
+
+
+def _alloc_removes_arrays(cfg: ShardedPQConfig, sizes_pre, min_value,
+                          rm_count, incoming=0):
+    """Array-level body of :func:`_alloc_removes`, taking the [L] lane
+    summaries (pre-tick sizes and heads) directly instead of the stacked
+    lane state — the distributed queue (core/distributed.py) feeds it
+    ALL-GATHERED per-device lane vectors so every device computes the
+    same replicated global allocation."""
+    L = sizes_pre.shape[0]
     rl = cfg.lane.r_max
-    sizes = (lanes.seq_len + lanes.par_count
-             + jnp.asarray(incoming, _I32))                   # [L]
-    heads = jnp.where(sizes > 0, lanes.min_value, INF)
+    sizes = sizes_pre + jnp.asarray(incoming, _I32)           # [L]
+    heads = jnp.where(sizes > 0, min_value, INF)
     r = jnp.asarray(rm_count, _I32)
     base = r // L
     rem = r % L
@@ -371,7 +412,8 @@ def _union_min(lanes: pqueue.PQState) -> jnp.ndarray:
 
 
 def _preroute_eliminate(cfg: ShardedPQConfig, state: ShardedState,
-                        add_keys, add_vals, add_mask, rm_count):
+                        add_keys, add_vals, add_mask, rm_count,
+                        union_min=None):
     """Queue-level elimination BEFORE routing (paper §2.2 scaled to lanes).
 
     The paper's elimination array lets balanced add/removeMin traffic
@@ -410,11 +452,16 @@ def _preroute_eliminate(cfg: ShardedPQConfig, state: ShardedState,
     w = add_keys.shape[0]
     n_adds = add_mask.sum(dtype=_I32)
     opportunity = jnp.minimum(n_adds, rm_count)
+    # the distributed queue overrides the bound with the GLOBAL
+    # min-of-lane-heads (all-gathered across devices) so each device's
+    # replicated pass matches against the same bound the single-device
+    # queue would use
+    if union_min is None:
+        union_min = _union_min(state.lanes)
 
     def _run(_):
         er = elimination.eliminate_batch_unsorted(
-            add_keys, add_vals, add_mask, rm_count,
-            _union_min(state.lanes))
+            add_keys, add_vals, add_mask, rm_count, union_min)
         return (add_keys.astype(_F32), add_vals.astype(_I32),
                 er.residual_mask, er.residual_rm, er.matched_keys,
                 er.matched_vals, er.n_matched, jnp.ones((), bool))
@@ -615,15 +662,42 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
     lanes, res_k, res_v, n_lane, n_drop = jax.lax.cond(
         lane_work, _do, _skip, state.lanes)
 
-    # -- fold into one compacted stream: [pre-route matched | lane
-    # serves] (no global sort: callers of a relaxed queue get a near-min
-    # *set*, not an order).  Every lane serves a PREFIX of its result
-    # row (the removed stream is [imm elim | merged prefix | moveHead
-    # prefix], each segment dense), so compaction is ragged-segment
-    # arithmetic over the lane counts — a [out_w, L] compare-all instead
-    # of an [out_w, L*rl] searchsorted scan.  n_matched + lane grants
-    # <= rm_count <= out_w (grants are allocated from the residual), so
-    # the prefix can never push a lane serve off the end --
+    result = _fold_results(n_matched, matched_k, matched_v, res_k,
+                           res_v, n_lane)
+
+    new_state = ShardedState(
+        lanes=lanes,
+        rng=key,
+        route=route,
+        route_inv=route_inv,
+        tick_idx=state.tick_idx + 1,
+        n_router_dropped=state.n_router_dropped + n_drop,
+        elim_ema=elim_ema,
+        balance_ema=balance_ema,
+        n_preroute_elim=state.n_preroute_elim + n_matched,
+        n_preroute_ticks=state.n_preroute_ticks + elim_ran.astype(_I32),
+    )
+    return new_state, result
+
+
+def _fold_results(n_matched, matched_k, matched_v, res_k, res_v,
+                  n_lane) -> ShardedTickResult:
+    """Fold per-lane serves into one compacted stream: [pre-route matched
+    | lane serves] (no global sort: callers of a relaxed queue get a
+    near-min *set*, not an order).  Every lane serves a PREFIX of its
+    result row (the removed stream is [imm elim | merged prefix |
+    moveHead prefix], each segment dense), so compaction is
+    ragged-segment arithmetic over the lane counts — a [out_w, L]
+    compare-all instead of an [out_w, L*rl] searchsorted scan.
+    n_matched + lane grants <= rm_count <= out_w (grants are allocated
+    from the residual), so the prefix can never push a lane serve off
+    the end.  Shared with the distributed queue (core/distributed.py),
+    which runs it on the all-device result stack AFTER shard_map — the
+    lane segments of the global stream are exactly the exclusive prefix
+    over per-device serve counts, so assembly needs no coordinator."""
+    L, rl = res_k.shape
+    w = matched_k.shape[0]
+    out_w = max(w, L * rl)
     cum = jnp.cumsum(n_lane)
     offs = cum - n_lane
     n_served = cum[L - 1]
@@ -642,20 +716,7 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
         in_matched, matched_v[jnp.clip(j, 0, w - 1)],
         jnp.where(got_lane, res_v.reshape(-1)[flat], EMPTY_VAL))
     got = in_matched | got_lane
-
-    new_state = ShardedState(
-        lanes=lanes,
-        rng=key,
-        route=route,
-        route_inv=route_inv,
-        tick_idx=state.tick_idx + 1,
-        n_router_dropped=state.n_router_dropped + n_drop,
-        elim_ema=elim_ema,
-        balance_ema=balance_ema,
-        n_preroute_elim=state.n_preroute_elim + n_matched,
-        n_preroute_ticks=state.n_preroute_ticks + elim_ran.astype(_I32),
-    )
-    return new_state, ShardedTickResult(rm_keys, rm_vals, got)
+    return ShardedTickResult(rm_keys, rm_vals, got)
 
 
 @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)

@@ -1,5 +1,13 @@
 """Multi-device integration (8 fake devices in a subprocess — device count
-locks at first jax init, so these cannot share the main pytest process)."""
+locks at first jax init, so these cannot share the main pytest process).
+
+The subprocess (tests/multidev_checks.py) exits 42 when the host device
+count could not be forced (e.g. a platform that ignores
+--xla_force_host_platform_device_count); that becomes a clean skip here
+instead of an opaque assertion.  On failure the FULL stderr tail is part
+of the assertion message, so import errors and tracebacks inside the
+subprocess surface in the pytest report instead of being swallowed.
+"""
 
 import os
 import subprocess
@@ -10,30 +18,37 @@ import pytest
 
 _SCRIPT = Path(__file__).parent / "multidev_checks.py"
 _ROOT = Path(__file__).parent.parent
+_SKIP_EXIT = 42
 
 
 def _run(which: str, timeout: int = 900):
     env = {**os.environ,
            "PYTHONPATH": str(_ROOT / "src"),
+           "JAX_PLATFORMS": "cpu",
            "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
     proc = subprocess.run([sys.executable, str(_SCRIPT), which],
                           capture_output=True, text=True, timeout=timeout,
                           env=env, cwd=str(_ROOT))
+    if proc.returncode == _SKIP_EXIT:
+        reason = (proc.stderr.strip().splitlines() or ["no reason given"])[-1]
+        pytest.skip(f"multidev harness: {reason}")
     assert proc.returncode == 0, (
-        f"{which} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-4000:]}")
+        f"{which} failed (exit {proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-8000:]}")
     return proc.stdout
 
 
 @pytest.mark.slow
-def test_distributed_pq_8dev():
-    out = _run("pq")
-    assert "OK distributed_pq" in out
+def test_dist_sharded_8dev():
+    out = _run("dist")
+    assert "OK dist_sharded" in out
 
 
 @pytest.mark.slow
-def test_distributed_pq_v2_sharded_parallel_part():
-    out = _run("pqv2")
-    assert "OK distributed_pq_v2" in out
+def test_dist_sharded_equals_single_device():
+    out = _run("dist_equiv")
+    assert "OK dist_equiv" in out
 
 
 @pytest.mark.slow
