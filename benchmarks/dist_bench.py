@@ -58,9 +58,12 @@ def _cell_name(p_add: float, key_dist: str) -> str:
     return f"w{WIDTH}_p{int(round(p_add * 100))}_{key_dist}_dist"
 
 
-def bench_dist_mix(p_add: float, key_dist: str, preroute: str) -> dict:
+def bench_dist_mix(p_add: float, key_dist: str, preroute: str, lane_scale=None) -> dict:
     """us_per_tick of the D=8 x l=1 mesh queue on one workload cell
-    (scan driver, min dispatch overhead — the dist twin of bench_mix)."""
+    (scan driver, min dispatch overhead — the dist twin of bench_mix).
+
+    ``lane_scale`` is the degraded-mode grant throttle ([L] f32 fed to
+    every tick); None is the healthy unthrottled queue."""
     from repro.core import distributed as dq
 
     base = pq_bench.make_cfg(WIDTH)
@@ -92,12 +95,13 @@ def bench_dist_mix(p_add: float, key_dist: str, preroute: str) -> dict:
     stam = jnp.stack([b[2] for b in batches])
     rms = jnp.full((TICKS,), n_rm, jnp.int32)
 
+    scale = None if lane_scale is None else jnp.asarray(lane_scale, jnp.float32)
     # tick_n donates its state: compile + warm on a throwaway copy
     spare = jax.tree.map(jnp.copy, state)
-    s2, _ = q.tick_n(spare, stak, stav, stam, rms)
+    s2, _ = q.tick_n(spare, stak, stav, stam, rms, scale)
     jax.block_until_ready(s2)
     t0 = time.perf_counter()
-    state, _ = q.tick_n(state, stak, stav, stam, rms)
+    state, _ = q.tick_n(state, stak, stav, stam, rms, scale)
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
 
@@ -144,7 +148,38 @@ def run_cells() -> dict:
             f"|elim_win="
             f"{cell['dist_sharded_D8_noelim'] / cell['dist_sharded_D8']:.2f}x"
         )
+    out[f"w{WIDTH}_p50_des_dist_degraded"] = run_degraded_cell(
+        out[f"w{WIDTH}_p50_des_dist"]["dist_sharded_D8"]
+    )
     return out
+
+
+def run_degraded_cell(healthy_us: float) -> dict:
+    """The graceful-degradation cell (ISSUE 6 acceptance): D=8 with one
+    straggling device grant-throttled to the EMA floor (0.25), p50 DES.
+
+    Paired with the healthy D8 number measured moments earlier in the
+    same process, so the <2x wedging gate compares like with like (same
+    host load, same compile cache) — a throttled straggler must DEGRADE
+    throughput, never stall the synchronized round.
+    """
+    scale = np.ones((N_DEVICES * LANES_PER_DEVICE,), np.float32)
+    scale[:LANES_PER_DEVICE] = 0.25  # device 0 at the CostEma weight floor
+    runs = [
+        bench_dist_mix(0.5, "des", "adaptive", lane_scale=scale)
+        for _ in range(RUNS)
+    ]
+    degraded_us = round(min(r["us_per_tick"] for r in runs), 2)
+    ratio = degraded_us / healthy_us
+    assert ratio < 2.0, (
+        f"degraded-mode tick latency {degraded_us:.2f}us is {ratio:.2f}x "
+        f"the healthy D8 cell ({healthy_us:.2f}us) — wedging gate is 2x"
+    )
+    print(
+        f"dist_degraded_w{WIDTH}_p50_des,{degraded_us:.2f},"
+        f"degraded/healthy={ratio:.2f}x|gate=2.0x"
+    )
+    return {"dist_sharded_D8": healthy_us, "dist_sharded_D8_degraded": degraded_us}
 
 
 def main() -> None:

@@ -73,9 +73,17 @@ def main() -> None:
 
 
 def main_mesh() -> None:
-    """Fleet-scale dispatch: DistShardedQueue as the cluster scheduler."""
+    """Fleet-scale dispatch: DistShardedQueue as the cluster scheduler.
+
+    With ``PQ_CHAOS`` set (e.g. ``seed:7`` or ``kill:3@8``; see
+    repro.ft.inject.parse_chaos) the first kill event in the schedule
+    declares that device dead mid-run: its lanes drain-and-remap over
+    the survivors and the conservation assert below covers the resize —
+    the CI chaos leg drives exactly this path.
+    """
     from repro.core import distributed as dq
     from repro.core.config import EMPTY_VAL, PQConfig
+    from repro.ft import parse_chaos
 
     n_devices = len(jax.devices())
     W = 128                      # request-wave width (op batch per tick)
@@ -84,11 +92,21 @@ def main_mesh() -> None:
                     bucket_cap=64, detach_min=8, detach_max=256,
                     detach_init=16, chop_patience=8)
     q = dq.DistShardedQueue(
-        dq.make_dist_cfg(W, n_devices, 2, base=base))
+        dq.make_dist_cfg(W, n_devices, 2, base=base,
+                         spare_devices=1 if n_devices > 1 else 0))
     state = q.init(seed=0)
     print(f"\nmesh dispatch: {n_devices} device(s) x "
           f"{q.cfg.lanes_per_device} lanes, wave width {W}, "
           f"{n_workers} worker slots/tick")
+
+    kill_step = kill_dev = None
+    chaos = parse_chaos(n_devices=n_devices)
+    if chaos is not None and n_devices > 1:
+        kills = [e for e in chaos.events if e.kind == "kill"]
+        if kills:
+            kill_dev = kills[0].device % n_devices
+            kill_step = max(1, int(kills[0].t0) % 20)
+            print(f"chaos: device {kill_dev} will die at wave {kill_step}")
 
     rng = np.random.default_rng(0)
     submitted = 0
@@ -97,6 +115,13 @@ def main_mesh() -> None:
     urgent_latency = []          # dispatch latency in ticks
     clock = 0.0
     for step in range(24):
+        if step == kill_step:
+            pre = int(q.size(state))
+            q, state = q.remove_device(state, kill_dev)
+            assert int(q.size(state)) == pre, "resize lost requests!"
+            print(f"device {kill_dev} dead at wave {step}: lanes "
+                  f"re-sharded over {q.cfg.n_devices} survivors "
+                  f"({pre} backlogged requests conserved)")
         # bulk arrivals: priority ~ deadline (DES hold model: a bit
         # above the current virtual clock); arrival rate ~ service rate
         # (the balanced regime where elimination thrives, and standing

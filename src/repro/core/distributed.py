@@ -121,6 +121,7 @@ def make_dist_cfg(
     *,
     base: PQConfig,
     slack: float = 1.0,
+    spare_devices: int = 0,
     preroute: str = "adaptive",
     axis: str = "data",
 ) -> DistShardedPQConfig:
@@ -129,12 +130,23 @@ def make_dist_cfg(
     Per-lane geometry comes from :func:`sharded.make_sharded_cfg` with
     L = n_devices * lanes_per_device total lanes, so dist(D, l) and
     single-device sharded(L = D * l) share one config modulo placement.
+
+    ``spare_devices`` sizes per-lane quotas for the elastic
+    fault-tolerant path (:func:`resize`): quotas are computed as if only
+    ``n_devices - spare_devices`` devices carried the full batch, so the
+    queue can lose up to that many devices and the shrunken mesh's
+    permuted round-robin still cannot overflow a lane (full-width
+    re-insertion of a drained device stays drop-free, and the healthy
+    queue keeps serving full batches through every intermediate size).
     """
+    if not 0 <= spare_devices < n_devices:
+        raise ValueError("spare_devices must be in [0, n_devices)")
     scfg = sharded.make_sharded_cfg(
         width,
         n_devices * lanes_per_device,
         base=base,
         slack=slack,
+        min_lanes=(n_devices - spare_devices) * lanes_per_device,
         preroute=preroute,
     )
     return DistShardedPQConfig(shard=scfg, n_devices=n_devices, axis=axis)
@@ -169,14 +181,9 @@ def default_mesh(cfg: DistShardedPQConfig) -> Mesh:
     return Mesh(np.asarray(devs[: cfg.n_devices]), (cfg.axis,))
 
 
-def init(cfg: DistShardedPQConfig, mesh: Mesh, *, seed: int = 0) -> ShardedState:
-    """Queue state placed on the mesh: the pytree is bit-identical to
-    ``sharded.init(cfg.shard, seed=seed)`` — only the sharding differs
-    (lanes split over devices, control plane replicated), so every
-    ``sharded`` introspection helper (stats/size/lane_sizes) works on
-    it unchanged."""
-    state = sharded.init(cfg.shard, seed=seed)
-    placement = ShardedState(
+def _placement(cfg: DistShardedPQConfig, mesh: Mesh) -> ShardedState:
+    """NamedSharding pytree matching :func:`_state_specs` on ``mesh``."""
+    return ShardedState(
         lanes=NamedSharding(mesh, P(cfg.axis)),
         rng=NamedSharding(mesh, P()),
         route=NamedSharding(mesh, P()),
@@ -188,7 +195,16 @@ def init(cfg: DistShardedPQConfig, mesh: Mesh, *, seed: int = 0) -> ShardedState
         n_preroute_elim=NamedSharding(mesh, P()),
         n_preroute_ticks=NamedSharding(mesh, P()),
     )
-    return jax.device_put(state, placement)
+
+
+def init(cfg: DistShardedPQConfig, mesh: Mesh, *, seed: int = 0) -> ShardedState:
+    """Queue state placed on the mesh: the pytree is bit-identical to
+    ``sharded.init(cfg.shard, seed=seed)`` — only the sharding differs
+    (lanes split over devices, control plane replicated), so every
+    ``sharded`` introspection helper (stats/size/lane_sizes) works on
+    it unchanged."""
+    state = sharded.init(cfg.shard, seed=seed)
+    return jax.device_put(state, _placement(cfg, mesh))
 
 
 def _dist_tick_body(
@@ -200,6 +216,7 @@ def _dist_tick_body(
     add_vals,
     add_mask,
     rm_count,
+    lane_scale,
 ):
     """Per-device body (under shard_map): the sharded tick with the lane
     axis cut to this device's ``n_local`` lanes.
@@ -210,6 +227,13 @@ def _dist_tick_body(
     footprint.  Collectives sit OUTSIDE every data-dependent cond — a
     device-varying predicate around a collective would deadlock the
     SPMD program.
+
+    ``lane_scale`` ([L] f32, replicated) is the degraded-mode grant
+    throttle (repro.ft): each lane's grant cap is ``ceil(scale * r_max)``
+    — all-ones is bit-identical to the unthrottled tick, a fractional
+    scale sheds that lane's serve work onto healthy lanes through the
+    allocator's water-fill, and any positive scale keeps the lane
+    draining (ceil, so the cap never silently rounds to zero).
     """
     L = scfg.n_lanes
     lc = scfg.lane
@@ -217,6 +241,7 @@ def _dist_tick_body(
     w = add_keys.shape[0]
     out_w = max(w, L * rl)
     rm_count = jnp.minimum(jnp.asarray(rm_count, _I32), out_w)
+    grant_cap = jnp.ceil(jnp.asarray(lane_scale, _F32) * rl).astype(_I32)
     my = jax.lax.axis_index(axis)
     lane_lo = my.astype(_I32) * n_local
     local = state.lanes  # PQState stack, leaves lead-dim n_local
@@ -275,7 +300,7 @@ def _dist_tick_body(
     # axis = this device's window).  The incoming-aware variant only
     # exists under the lane-work cond (matching sharded._tick_impl) --
     grants0 = sharded._alloc_removes_arrays(
-        scfg, sizes_pre, min_v, rm_residual, incoming=0
+        scfg, sizes_pre, min_v, rm_residual, incoming=0, grant_cap=grant_cap
     )
     my_counts = jax.lax.dynamic_slice_in_dim(counts, lane_lo, n_local, 0)
     my_grants0 = jax.lax.dynamic_slice_in_dim(grants0, lane_lo, n_local, 0)
@@ -299,7 +324,7 @@ def _dist_tick_body(
             scfg, route_inv, add_keys, add_vals, add_mask, rows=(lane_lo, n_local)
         )
         grants = sharded._alloc_removes_arrays(
-            scfg, sizes_pre, min_v, rm_residual, incoming=incoming
+            scfg, sizes_pre, min_v, rm_residual, incoming=incoming, grant_cap=grant_cap
         )
         my_grants = jax.lax.dynamic_slice_in_dim(grants, lane_lo, n_local, 0)
         lanes2, res, n_lane = sharded._lanes_tick(
@@ -345,7 +370,7 @@ def _make_mapped(cfg: DistShardedPQConfig, mesh: Mesh):
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(sspec, P(), P(), P(), P()),
+        in_specs=(sspec, P(), P(), P(), P(), P()),
         out_specs=(sspec, lane_res),
     )
 
@@ -357,10 +382,15 @@ def make_dist_tick(cfg: DistShardedPQConfig, mesh: Mesh):
 
     @functools.partial(jax.jit, donate_argnums=0)
     def dist_tick(
-        state: ShardedState, add_keys, add_vals, add_mask, rm_count
+        state: ShardedState, add_keys, add_vals, add_mask, rm_count, lane_scale
     ) -> Tuple[ShardedState, ShardedTickResult]:
         new_state, parts = mapped(
-            state, add_keys, add_vals, add_mask, jnp.asarray(rm_count, _I32)
+            state,
+            add_keys,
+            add_vals,
+            add_mask,
+            jnp.asarray(rm_count, _I32),
+            jnp.asarray(lane_scale, _F32),
         )
         mk, mv, nm, rk, rv, nl = parts
         return new_state, sharded._fold_results(nm, mk, mv, rk, rv, nl)
@@ -375,10 +405,14 @@ def make_dist_tick_n(cfg: DistShardedPQConfig, mesh: Mesh):
     mapped = _make_mapped(cfg, mesh)
 
     @functools.partial(jax.jit, donate_argnums=0)
-    def dist_tick_n(state: ShardedState, add_keys, add_vals, add_mask, rm_counts):
+    def dist_tick_n(
+        state: ShardedState, add_keys, add_vals, add_mask, rm_counts, lane_scale
+    ):
+        scale = jnp.asarray(lane_scale, _F32)
+
         def step(s, xs):
             ak, av, am, rm = xs
-            s2, parts = mapped(s, ak, av, am, rm)
+            s2, parts = mapped(s, ak, av, am, rm, scale)
             mk, mv, nm, rk, rv, nl = parts
             return s2, sharded._fold_results(nm, mk, mv, rk, rv, nl)
 
@@ -386,6 +420,104 @@ def make_dist_tick_n(cfg: DistShardedPQConfig, mesh: Mesh):
         return jax.lax.scan(step, state, xs)
 
     return dist_tick_n
+
+
+# ---------------------------------------------------------------------------
+# elastic resize (drain-and-remap a dead device's lanes over survivors)
+# ---------------------------------------------------------------------------
+
+
+def resize(
+    cfg: DistShardedPQConfig,
+    mesh: Mesh,
+    state: ShardedState,
+    drop_device: int,
+) -> Tuple[DistShardedPQConfig, Mesh, ShardedState, np.ndarray, np.ndarray]:
+    """Shrink the mesh by one device: D·l lanes -> (D−1)·l.
+
+    Host-level (eager, rare path — runs once per death verdict, not per
+    tick).  The dropped device's lanes are DRAINED via
+    :func:`sharded.fold_lanes` — their resident elements come back as a
+    flat (keys, vals) batch for the caller to re-add through ordinary
+    ticks on the survivor mesh (the re-derived permuted round-robin
+    remaps them; :meth:`DistShardedQueue.remove_device` does both
+    halves).  Survivor lanes carry bit-for-bit; the replicated control
+    plane (PRNG, route, inverse) is re-derived for the new L, exactly
+    as a single-device fold.
+
+    Returns ``(new_cfg, new_mesh, new_state, drained_keys,
+    drained_vals)`` with ``new_state`` already placed on ``new_mesh``
+    (the old mesh minus the dropped position).  Works from the
+    coordinator's host copy of the state — in a real multi-host death
+    the dead device's HBM is gone, so the drain source would be the
+    replicated control plane plus the survivors' checkpoint of the lost
+    lanes; the single-host fake-device mesh (CI) reads the leaves
+    directly.
+    """
+    if cfg.n_devices < 2:
+        raise ValueError("cannot drop the last device")
+    if not 0 <= drop_device < cfg.n_devices:
+        raise ValueError(f"drop_device {drop_device} out of range")
+    lpd = cfg.lanes_per_device
+    lo = drop_device * lpd
+    keep = [i for i in range(cfg.shard.n_lanes) if not lo <= i < lo + lpd]
+    host = jax.tree.map(np.asarray, state)
+    new_scfg, folded, drained_keys, drained_vals = sharded.fold_lanes(
+        cfg.shard, host, keep
+    )
+    new_cfg = DistShardedPQConfig(
+        shard=new_scfg, n_devices=cfg.n_devices - 1, axis=cfg.axis
+    )
+    devs = list(np.asarray(mesh.devices).reshape(-1))
+    del devs[drop_device]
+    new_mesh = Mesh(np.asarray(devs), (cfg.axis,))
+    new_state = jax.device_put(folded, _placement(new_cfg, new_mesh))
+    return new_cfg, new_mesh, new_state, drained_keys, drained_vals
+
+
+def reinsert(
+    q: "DistShardedQueue", state: ShardedState, keys: np.ndarray, vals: np.ndarray
+) -> ShardedState:
+    """Re-add a drained batch through ordinary rm_count=0 ticks (the
+    remap half of drain-and-remap).
+
+    A zero-remove tick provably serves nothing (elimination opportunity
+    = min(adds, 0) = 0, grants = 0), so re-insertion cannot lose or
+    reorder anything — it only places.  Chunking keeps the router
+    drop-free: full batch width when the survivor quota covers it
+    (``spare_devices`` sizing), else ``lane.a_max`` per round (a chunk
+    no lane can overflow on, whatever the permutation does).
+    """
+    scfg = q.cfg.shard
+    w = scfg.a_total
+    if -(-w // scfg.n_lanes) <= scfg.lane.a_max:
+        chunk = w
+    else:
+        chunk = scfg.lane.a_max
+    dropped_pre = int(state.n_router_dropped)
+    for i in range(0, len(keys), chunk):
+        ck = np.asarray(keys[i : i + chunk], np.float32)
+        cv = np.asarray(vals[i : i + chunk], np.int32)
+        ak = np.full((w,), np.inf, np.float32)
+        av = np.full((w,), EMPTY_VAL, np.int32)
+        m = np.zeros((w,), bool)
+        ak[: len(ck)] = ck
+        av[: len(cv)] = cv
+        m[: len(ck)] = True
+        state, _ = q.tick(
+            state,
+            jnp.asarray(ak),
+            jnp.asarray(av),
+            jnp.asarray(m),
+            jnp.zeros((), _I32),
+        )
+    dropped = int(state.n_router_dropped) - dropped_pre
+    if dropped:
+        raise AssertionError(
+            f"re-insertion dropped {dropped} keys — survivor lane quotas "
+            "under-sized (make_dist_cfg spare_devices) and chunking failed"
+        )
+    return state
 
 
 class DistShardedQueue:
@@ -418,19 +550,58 @@ class DistShardedQueue:
         self.mesh = mesh
         self._tick = make_dist_tick(cfg, mesh)
         self._tick_n = make_dist_tick_n(cfg, mesh)
+        # all-ones = unthrottled (bit-identical to a capless allocation)
+        self._no_scale = jnp.ones((cfg.shard.n_lanes,), _F32)
 
     def init(self, *, seed: int = 0) -> ShardedState:
         return init(self.cfg, self.mesh, seed=seed)
 
     def tick(
-        self, state: ShardedState, add_keys, add_vals, add_mask, rm_count
+        self,
+        state: ShardedState,
+        add_keys,
+        add_vals,
+        add_mask,
+        rm_count,
+        lane_scale=None,
     ) -> Tuple[ShardedState, ShardedTickResult]:
-        return self._tick(state, add_keys, add_vals, add_mask, rm_count)
+        if lane_scale is None:
+            lane_scale = self._no_scale
+        return self._tick(state, add_keys, add_vals, add_mask, rm_count, lane_scale)
 
     def tick_n(
-        self, state: ShardedState, add_keys, add_vals, add_mask, rm_counts
+        self,
+        state: ShardedState,
+        add_keys,
+        add_vals,
+        add_mask,
+        rm_counts,
+        lane_scale=None,
     ) -> Tuple[ShardedState, ShardedTickResult]:
-        return self._tick_n(state, add_keys, add_vals, add_mask, rm_counts)
+        if lane_scale is None:
+            lane_scale = self._no_scale
+        return self._tick_n(state, add_keys, add_vals, add_mask, rm_counts, lane_scale)
+
+    def remove_device(
+        self, state: ShardedState, device: int, *, reinsert_drained: bool = True
+    ) -> Tuple["DistShardedQueue", ShardedState]:
+        """Drain-and-remap ``device``'s lanes over the survivors.
+
+        Returns ``(new_queue, new_state)`` — a fresh
+        :class:`DistShardedQueue` over the (D−1)-device mesh with the
+        dead device's resident elements re-inserted (unless
+        ``reinsert_drained=False``, for callers that stage the re-add
+        themselves).  Multiset conservation across the resize and the
+        ``relax_bound`` contract at the new L from the first post-resize
+        tick are pinned by tests/test_dist_resize.py.
+        """
+        new_cfg, new_mesh, new_state, dk, dv = resize(
+            self.cfg, self.mesh, state, device
+        )
+        q2 = DistShardedQueue(new_cfg, new_mesh)
+        if reinsert_drained:
+            new_state = reinsert(q2, new_state, dk, dv)
+        return q2, new_state
 
     def stats(self, state: ShardedState) -> sharded.ShardedStats:
         return sharded.stats(state)

@@ -57,6 +57,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import elimination, pqueue
 from repro.core.config import EMPTY_VAL, PQConfig
@@ -127,7 +128,7 @@ class ShardedPQConfig:
 
 
 def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
-                     slack: float = 1.0,
+                     slack: float = 1.0, min_lanes: int = None,
                      preroute: str = "adaptive") -> ShardedPQConfig:
     """Scale a width-`width` single-queue config down to L lanes.
 
@@ -141,8 +142,18 @@ def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
     the minimum legal headroom (2*per + 2): per-lane combine cost is
     dominated by the seq_cap + a_max merge, and a lane only ever needs
     its own share of head room, not base.seq_cap / L.
+
+    ``min_lanes`` sizes the per-lane geometry for an ELASTIC queue that
+    may fold down to that many lanes at runtime (:func:`fold_lanes` —
+    the fault-tolerance path of core/distributed.py): quotas become
+    ceil(width / min_lanes) — exact integer math, no float slack — so
+    the balanced router still cannot overflow a lane after the fold.
     """
-    per = max(8, min(width, int(-(-slack * width // n_lanes))))
+    eff = n_lanes if min_lanes is None else min_lanes
+    if not (1 <= eff <= n_lanes):
+        raise ValueError("min_lanes must be in [1, n_lanes]")
+    per = max(8, min(width, max(int(-(-slack * width // n_lanes)),
+                                -(-width // eff))))
     lane = dataclasses.replace(
         base,
         a_max=per, r_max=per,
@@ -360,14 +371,27 @@ def _alloc_removes(cfg: ShardedPQConfig, lanes: pqueue.PQState, rm_count,
 
 
 def _alloc_removes_arrays(cfg: ShardedPQConfig, sizes_pre, min_value,
-                          rm_count, incoming=0):
+                          rm_count, incoming=0, grant_cap=None):
     """Array-level body of :func:`_alloc_removes`, taking the [L] lane
     summaries (pre-tick sizes and heads) directly instead of the stacked
     lane state — the distributed queue (core/distributed.py) feeds it
     ALL-GATHERED per-device lane vectors so every device computes the
-    same replicated global allocation."""
+    same replicated global allocation.
+
+    ``grant_cap`` ([L] i32, optional) throttles per-lane grants below
+    the r_max ceiling — the straggler degraded mode (repro.ft): a slow
+    device's lanes get a smaller cap and the water-fill second pass
+    re-grants the difference to healthy lanes in head order, so one
+    straggler sheds serve work instead of stalling the synchronized
+    round.  ``None`` (and any cap >= r_max) is bit-identical to the
+    unthrottled allocation.
+    """
     L = sizes_pre.shape[0]
     rl = cfg.lane.r_max
+    if grant_cap is None:
+        cap = jnp.full((L,), rl, _I32)
+    else:
+        cap = jnp.clip(jnp.asarray(grant_cap, _I32), 0, rl)
     sizes = sizes_pre + jnp.asarray(incoming, _I32)           # [L]
     heads = jnp.where(sizes > 0, min_value, INF)
     r = jnp.asarray(rm_count, _I32)
@@ -383,13 +407,13 @@ def _alloc_removes_arrays(cfg: ShardedPQConfig, sizes_pre, min_value,
                 & (i[None, :] < i[:, None])))
     head_rank = ahead.sum(axis=-1, dtype=_I32)
     want = base + (head_rank < rem).astype(_I32)
-    grant = jnp.minimum(jnp.minimum(want, sizes), rl)
+    grant = jnp.minimum(jnp.minimum(want, sizes), cap)
     shortfall = r - grant.sum(dtype=_I32)
     # second pass: hand the shortfall to lanes with leftover capacity,
     # again preferring small heads (water-fill by head order); a lane's
     # fill = whatever shortfall remains after all lanes ranked ahead of
     # it took their capacity
-    cap_left = jnp.minimum(sizes, rl) - grant
+    cap_left = jnp.minimum(sizes, cap) - grant
     before = jnp.sum(
         jnp.where(head_rank[None, :] < head_rank[:, None],
                   cap_left[None, :], 0), axis=-1, dtype=_I32)
@@ -811,3 +835,133 @@ def relax_bound(cfg: ShardedPQConfig, rm_count: int) -> int:
     r = rm_count
     return (r + cfg.n_lanes * (-(-r // cfg.n_lanes))
             + 2 * cfg.n_lanes * cfg.lane.a_max)
+
+
+# ---------------------------------------------------------------------------
+# elastic lane count (fold/unfold at runtime)
+# ---------------------------------------------------------------------------
+#
+# The lane count L is static per-config (every shape depends on it), but
+# the router's permuted round-robin tolerates L *changing between
+# configs*: a route is re-derived from (rng, W, L) alone, grants are
+# re-derived from the [L] lane summaries every tick, and no lane ever
+# holds another lane's state.  Folding lanes is therefore a host-level
+# config swap: keep the surviving lanes' PQState rows bit-for-bit, drain
+# the dropped lanes' resident elements into an ordinary add batch, and
+# re-derive the control plane (PRNG, permutation, inverse) for the new
+# L.  This is the mechanism behind the fault-tolerant mesh resize
+# (repro.core.distributed.resize: a dead device's lanes fold over the
+# survivors) and behind elastic lane scaling generally.
+
+def resident(cfg: ShardedPQConfig, lanes: pqueue.PQState):
+    """Enumerate every resident element of the stacked lanes.
+
+    Returns ``(keys [L, cap], vals [L, cap], live [L, cap])`` with
+    cap = seq_cap + par_cap: the sequential part is its dense sorted
+    prefix (``seq_len``), the parallel part is every finite bucket slot
+    (INF = empty by the bucket invariant).  Pure shape-static jnp math —
+    usable under jit, though the elastic path calls it host-side."""
+    lc = cfg.lane
+    live_seq = (jnp.arange(lc.seq_cap, dtype=_I32)[None, :]
+                < lanes.seq_len[:, None])
+    bk = lanes.buckets.reshape(lanes.buckets.shape[0], -1)
+    bv = lanes.bvals.reshape(lanes.bvals.shape[0], -1)
+    live_par = jnp.isfinite(bk)
+    keys = jnp.concatenate([lanes.seq_keys, bk], axis=-1)
+    vals = jnp.concatenate([lanes.seq_vals, bv], axis=-1)
+    live = jnp.concatenate([live_seq, live_par], axis=-1)
+    return keys, vals, live
+
+
+def fold_lanes(cfg: ShardedPQConfig, state: ShardedState, keep):
+    """Shrink the queue to the ``keep`` lanes (host-level, eager).
+
+    ``keep`` is the ordered list of surviving lane indices.  Surviving
+    lanes' PQState rows are carried bit-for-bit; the dropped lanes'
+    resident elements are DRAINED into a flat (keys, vals) batch the
+    caller re-adds through ordinary ticks (the router's permuted
+    round-robin re-maps them over the survivors — that re-add is the
+    "remap" half of drain-and-remap).  The replicated control plane is
+    re-derived for the new L: the PRNG advances by one fold_in (split)
+    step, and a fresh permutation + inverse are built from it, exactly
+    as a resample tick would.  Counters (tick_idx, stats, controller
+    EMAs) carry over — the fold changes placement, not history.
+
+    Returns ``(new_cfg, new_state, drained_keys, drained_vals)`` (the
+    drained arrays are 1-D np arrays, possibly empty).  Multiset
+    conservation — kept + drained == pre-fold resident — is asserted
+    here; the relax-bound contract after the fold is
+    ``relax_bound(new_cfg, r)`` from the first post-fold tick (pinned by
+    tests/test_dist_resize.py).
+    """
+    keep = [int(i) for i in keep]
+    L = cfg.n_lanes
+    if sorted(set(keep)) != sorted(keep) or not keep:
+        raise ValueError("keep must be a nonempty list of distinct lanes")
+    if any(i < 0 or i >= L for i in keep):
+        raise ValueError(f"keep out of range for L={L}")
+    drop = [i for i in range(L) if i not in keep]
+    new_cfg = dataclasses.replace(cfg, n_lanes=len(keep))
+
+    keys, vals, live = resident(cfg, state.lanes)
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    live = np.asarray(live)
+    if drop:
+        dmask = live[drop]
+        drained_keys = keys[drop][dmask].astype(np.float32)
+        drained_vals = vals[drop][dmask].astype(np.int32)
+    else:
+        drained_keys = np.zeros((0,), np.float32)
+        drained_vals = np.zeros((0,), np.int32)
+    sizes = np.asarray(state.lanes.seq_len + state.lanes.par_count)
+    want = int(sizes[drop].sum()) if drop else 0
+    assert len(drained_keys) == want, (
+        f"drain miscount: enumerated {len(drained_keys)}, lanes report "
+        f"{want} — bucket invariant violated")
+
+    idx = jnp.asarray(keep, _I32)
+    lanes_new = jax.tree.map(lambda x: jnp.asarray(x)[idx], state.lanes)
+    # re-derive the replicated control plane on the new lane count: one
+    # PRNG step (as a resample tick would take), then a fresh permuted
+    # round-robin over the SAME op-batch width with the new L
+    key2, sub = jax.random.split(jnp.asarray(state.rng))
+    route = _fresh_route(sub, cfg.a_total, len(keep))
+    route_inv = jnp.argsort(route, stable=True).astype(_I32)
+    new_state = ShardedState(
+        lanes=lanes_new,
+        rng=key2,
+        route=route,
+        route_inv=route_inv,
+        tick_idx=jnp.asarray(state.tick_idx),
+        n_router_dropped=jnp.asarray(state.n_router_dropped),
+        elim_ema=jnp.asarray(state.elim_ema),
+        balance_ema=jnp.asarray(state.balance_ema),
+        n_preroute_elim=jnp.asarray(state.n_preroute_elim),
+        n_preroute_ticks=jnp.asarray(state.n_preroute_ticks),
+    )
+    return new_cfg, new_state, drained_keys, drained_vals
+
+
+def unfold_lanes(cfg: ShardedPQConfig, state: ShardedState, n_lanes: int):
+    """Grow the queue to ``n_lanes`` by appending EMPTY lanes (the
+    scale-out inverse of :func:`fold_lanes`: a recovered or new device's
+    lanes join with nothing in them and fill through the re-derived
+    router).  Returns ``(new_cfg, new_state)``; existing lanes carry
+    bit-for-bit, so the resident multiset is untouched."""
+    L = cfg.n_lanes
+    if n_lanes < L:
+        raise ValueError("unfold_lanes cannot shrink; use fold_lanes")
+    new_cfg = dataclasses.replace(cfg, n_lanes=n_lanes)
+    if n_lanes == L:
+        return new_cfg, state
+    fresh = _stack_init(dataclasses.replace(cfg, n_lanes=n_lanes - L))
+    lanes_new = jax.tree.map(
+        lambda a, b: jnp.concatenate([jnp.asarray(a), b], axis=0),
+        state.lanes, fresh)
+    key2, sub = jax.random.split(jnp.asarray(state.rng))
+    route = _fresh_route(sub, cfg.a_total, n_lanes)
+    new_state = state._replace(
+        lanes=lanes_new, rng=key2, route=route,
+        route_inv=jnp.argsort(route, stable=True).astype(_I32))
+    return new_cfg, new_state

@@ -1,6 +1,10 @@
 from repro.ft.heartbeat import FailureDetector, HeartbeatTable
-from repro.ft.straggler import StragglerQueue
-from repro.ft.elastic import ElasticTrainer
+from repro.ft.inject import (FaultEvent, FaultInjector, FaultSchedule,
+                             SimClock, lane_weights, parse_chaos)
+from repro.ft.straggler import CostEma, StragglerQueue, WorkItem
+from repro.ft.elastic import ElasticDistQueue, ElasticTrainer
 
-__all__ = ["FailureDetector", "HeartbeatTable", "StragglerQueue",
+__all__ = ["FailureDetector", "HeartbeatTable", "SimClock", "FaultEvent",
+           "FaultSchedule", "FaultInjector", "parse_chaos", "lane_weights",
+           "CostEma", "StragglerQueue", "WorkItem", "ElasticDistQueue",
            "ElasticTrainer"]

@@ -1,23 +1,158 @@
-"""Elastic training: checkpoint/restart across topology changes.
+"""Elastic recovery: the controllers that close the fault-tolerance loop.
 
-The recovery path at pod scale: a failure detector (repro.ft.heartbeat)
-marks a slice dead -> the job restarts on the surviving mesh -> the
-checkpoint manifest (global shapes + specs, repro.ckpt) re-shards every
-leaf onto the new mesh -> the data pipeline seeks to the saved step
-(repro.data.synthetic is (seed, step)-pure) -> training resumes bit-exact
-up to reduction order.
+Two recovery paths live here:
 
-``ElasticTrainer`` packages that loop for tests and the train example; the
-mesh transition itself is just `restore(..., shardings_on_new_mesh)`.
+* :class:`ElasticDistQueue` — the SERVING path (DESIGN.md §"Failure
+  model").  Wraps a :class:`repro.core.distributed.DistShardedQueue`
+  with the full detect → degrade → resize loop: a
+  :class:`repro.ft.inject.FaultInjector` (schedule + injected clock)
+  drives the :class:`repro.ft.heartbeat.FailureDetector`; straggler
+  costs feed a :class:`repro.ft.straggler.CostEma` whose weights
+  throttle grants through the tick's ``lane_scale``; a death verdict
+  (heartbeat silence past ``dead_after``, or bounded-retry exhaustion
+  on a faulted collective) triggers
+  :meth:`~repro.core.distributed.DistShardedQueue.remove_device` —
+  drain-and-remap over the survivors, multiset-conserving.
+* :class:`ElasticTrainer` — the TRAINING path: a failure detector marks
+  a slice dead -> the job restarts on the surviving mesh -> the
+  checkpoint manifest (global shapes + specs, repro.ckpt) re-shards
+  every leaf onto the new mesh -> the data pipeline seeks to the saved
+  step (repro.data.synthetic is (seed, step)-pure) -> training resumes
+  bit-exact up to reduction order.  The mesh transition itself is just
+  `restore(..., shardings_on_new_mesh)`.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
-import jax
+import numpy as np
+import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
+from repro.ft.heartbeat import FailureDetector
+from repro.ft.inject import FaultInjector, FaultSchedule, SimClock, lane_weights
+from repro.ft.straggler import CostEma
+
+
+class ElasticDistQueue:
+    """Fault-tolerant wrapper of a DistShardedQueue: detect -> degrade
+    -> resize, all deterministic under the injected clock.
+
+    The controller owns the queue, its state, and the FT stack, and maps
+    ORIGINAL device ids (what the schedule and detector speak) to
+    current mesh positions through ``self.live`` (original ids in mesh
+    position order — :meth:`repro.core.distributed.DistShardedQueue.
+    remove_device` takes a position, so the mapping shrinks with the
+    mesh).  Per :meth:`step`:
+
+    1. one :class:`FaultInjector` detection round — heartbeats from
+       every device the schedule lets speak, then verdicts;
+    2. NEWLY dead devices -> drain-and-remap resize (multiset
+       conserving; see DESIGN.md §"Failure model");
+    3. grant weights — :class:`CostEma` of observed tick costs for
+       healthy-but-slow devices, the EMA floor for suspected
+       (silent-but-not-dead) ones — expanded per-lane into the tick's
+       ``lane_scale``;
+    4. bounded retry on the collective: while any live device is
+       faulted (killed/partitioned but not yet declared), the tick
+       cannot complete — each attempt burns ``collective_timeout`` on
+       the clock and re-checks; after ``max_retries`` the faulted
+       devices are declared dead out-of-band and re-sharded away, so a
+       partition degrades latency but never wedges the queue;
+    5. the real tick on the healthy mesh (``tick_dt`` clock cost).
+    """
+
+    def __init__(self, queue, *, schedule: Optional[FaultSchedule] = None,
+                 seed: int = 0, tick_dt: float = 1.0,
+                 suspect_after: float = 3.0, dead_after: float = 6.0,
+                 collective_timeout: float = 2.0, max_retries: int = 3,
+                 ema_decay: float = 0.5, weight_floor: float = 0.25):
+        self.queue = queue
+        self.state = queue.init(seed=seed)
+        self.clock = SimClock()
+        self.schedule = schedule if schedule is not None else FaultSchedule.none()
+        n = queue.cfg.n_devices
+        self.live: List[int] = list(range(n))
+        self.detector = FailureDetector(
+            range(n), suspect_after=suspect_after, dead_after=dead_after,
+            now=self.clock.now)
+        self.injector = FaultInjector(self.schedule, self.detector, self.clock,
+                                      base_cost=tick_dt)
+        self.cost_ema = CostEma(n, decay=ema_decay, floor=weight_floor)
+        self.tick_dt = float(tick_dt)
+        self.collective_timeout = float(collective_timeout)
+        self.max_retries = int(max_retries)
+
+    # -- introspection -----------------------------------------------------
+
+    def size(self) -> int:
+        return int(self.queue.size(self.state))
+
+    def relax_bound(self, rm_count: int) -> int:
+        """Current-mesh rank bound (L shrinks with the mesh)."""
+        return self.queue.relax_bound(rm_count)
+
+    # -- recovery internals ------------------------------------------------
+
+    def _remove(self, device: int) -> None:
+        """Re-shard ORIGINAL device id ``device`` away (position lookup
+        through the live list)."""
+        if device not in self.live or len(self.live) < 2:
+            return
+        pos = self.live.index(device)
+        self.queue, self.state = self.queue.remove_device(self.state, pos)
+        self.live.remove(device)
+
+    def _lane_scale(self, suspected) -> np.ndarray:
+        w = self.cost_ema.weights(self.live)
+        for i, dev in enumerate(self.live):
+            if dev in suspected:
+                # silent-but-not-dead: no timing signal, assume the
+                # worst the floor allows (keeps the lanes draining)
+                w[i] = self.cost_ema.floor
+        return lane_weights(w, self.queue.cfg.lanes_per_device)
+
+    def _await_collective(self):
+        """Bounded retry until no live device is faulted; returns the
+        devices declared dead out-of-band (retry exhaustion)."""
+        declared = []
+        for _ in range(self.max_retries):
+            if not any(self.schedule.faulty(d, self.clock.now)
+                       for d in self.live):
+                return declared
+            self.clock.advance(self.collective_timeout)
+        for d in list(self.live):
+            if self.schedule.faulty(d, self.clock.now) and len(self.live) > 1:
+                self.detector.declare_dead(d)
+                self._remove(d)
+                declared.append(d)
+        return declared
+
+    # -- the fault-tolerant tick -------------------------------------------
+
+    def step(self, add_keys, add_vals, add_mask, rm_count):
+        """One fault-tolerant synchronized round.
+
+        Returns ``(result, info)`` — the tick's ShardedTickResult plus
+        ``{"removed", "suspected", "weights", "retained_retries"}`` for
+        observability (tests assert on it)."""
+        verdict = self.injector.step()
+        self.cost_ema.update(verdict["costs"])
+        removed = []
+        for d in sorted(verdict["dead"]):
+            if d in self.live and len(self.live) > 1:
+                self._remove(d)
+                removed.append(d)
+        removed += self._await_collective()
+        suspected = {d for d in verdict["suspected"] if d in self.live}
+        scale = self._lane_scale(suspected)
+        self.state, res = self.queue.tick(
+            self.state, add_keys, add_vals, add_mask, rm_count,
+            jnp.asarray(scale))
+        self.clock.advance(self.tick_dt)
+        return res, {"removed": removed, "suspected": suspected,
+                     "weights": scale, "live": list(self.live)}
 
 
 class ElasticTrainer:

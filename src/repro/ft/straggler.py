@@ -1,31 +1,39 @@
 """Straggler mitigation via the adaptive priority queue (paper -> FT).
 
-Grad-accumulation microbatches are work items keyed by *predicted cost*
-(an EMA of observed step time per item class).  Workers pull from the
-shared queue:
+Two mechanisms, both fed by the same signal (observed per-worker tick
+cost):
 
-* fast workers drain the sequential part (cheapest items first — they
-  finish early and steal more);
-* a straggler's excess items remain in the queue for others (work
-  stealing — the paper's disjoint-access parallel part holds costly items
-  that nobody is forced to take early);
-* **elimination** appears when a re-submitted duplicate (speculative
-  execution of a suspected straggler's item) meets its completion: the
-  pair cancels without touching the queue.
+* **work stealing through the queue** — grad-accumulation microbatches
+  are work items keyed by *predicted cost*; workers pull from a shared
+  :class:`StragglerQueue` (the L-lane sharded engine,
+  :mod:`repro.core.sharded` — the REAL tick, not a seed-era wrapper):
+  fast workers drain cheap items first and steal more, a straggler's
+  excess items stay queued for others.
+* **grant throttling in the mesh queue** — :class:`CostEma` keeps a
+  per-device EMA of observed tick cost and converts it to grant
+  *weights*; the distributed queue's c-relaxed allocation
+  (:func:`repro.core.sharded._alloc_removes_arrays` via its
+  ``grant_cap``) then grants a slow device's lanes proportionally fewer
+  removes per round, so a straggler in the suspect-but-not-dead window
+  degrades throughput smoothly instead of stalling every synchronized
+  round at its speed (repro.ft.elastic wires this into
+  DistShardedQueue ticks).
 
-The simulation below is deterministic and drives the real BatchPQ; it is
-exercised by tests/test_ft.py and the EXPERIMENTS.md straggler table.
+The simulation below is deterministic; it is exercised by
+tests/test_ft.py and benchmarks/run.py's ``bench_straggler``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
+import jax.numpy as jnp
 
-from repro.core import PQConfig
-from repro.serving.scheduler import PQScheduler, Request
+from repro.core import sharded as shq
+from repro.core.config import EMPTY_VAL, PQConfig
+from repro.core.sharded import ShardedPQConfig
 
 
 @dataclasses.dataclass
@@ -36,21 +44,102 @@ class WorkItem:
 
 
 class StragglerQueue:
-    """Cost-prioritized microbatch work queue with stealing."""
+    """Cost-prioritized microbatch work queue with stealing, backed by
+    the L-lane sharded engine (one synchronized round per ``pull``)."""
 
-    def __init__(self, items: List[WorkItem], cfg: Optional[PQConfig] = None):
-        self.sched = PQScheduler(cfg)
+    def __init__(self, items: List[WorkItem],
+                 cfg: Optional[ShardedPQConfig] = None, *,
+                 n_lanes: int = 4, seed: int = 0):
+        if cfg is None:
+            width = max(8, len(items))
+            base = PQConfig(
+                a_max=width, r_max=width, seq_cap=4 * width + 2,
+                n_buckets=8, bucket_cap=max(8, width),
+                detach_min=8, detach_max=256, detach_init=8,
+                chop_patience=64)
+            cfg = shq.make_sharded_cfg(width, n_lanes, base=base)
+        self.cfg = cfg
+        self.state = shq.init(cfg, seed=seed)
         self.items = {it.wid: it for it in items}
-        arrivals = [Request(rid=it.wid, priority=it.cost) for it in items]
-        # enqueue everything up-front (one combined tick, no removals)
-        self.sched.submit_and_acquire(arrivals, 0)
+        # enqueue everything up-front (add-only rounds, chunked to the
+        # op-batch width)
+        w = cfg.a_total
+        todo = list(items)
+        while todo:
+            chunk, todo = todo[:w], todo[w:]
+            ak = np.full((w,), np.inf, np.float32)
+            av = np.full((w,), EMPTY_VAL, np.int32)
+            mask = np.zeros((w,), bool)
+            for i, it in enumerate(chunk):
+                ak[i] = it.cost
+                av[i] = it.wid
+                mask[i] = True
+            self.state, _ = shq.tick(
+                cfg, self.state, jnp.asarray(ak), jnp.asarray(av),
+                jnp.asarray(mask), jnp.zeros((), jnp.int32))
 
     def pull(self, k: int) -> List[WorkItem]:
-        got = self.sched.submit_and_acquire([], k)
-        return [self.items[r.rid] for r in got]
+        """One remove-only round: up to k near-cheapest items (exact
+        min for k=1 — the grant goes to the lane with the smallest
+        head, which serves the union minimum)."""
+        w = self.cfg.a_total
+        ak = jnp.full((w,), jnp.inf, jnp.float32)
+        av = jnp.full((w,), EMPTY_VAL, jnp.int32)
+        mask = jnp.zeros((w,), bool)
+        self.state, res = shq.tick(self.cfg, self.state, ak, av, mask,
+                                   jnp.asarray(k, jnp.int32))
+        served = np.asarray(res.rm_served)
+        vals = np.asarray(res.rm_vals)[served]
+        return [self.items[int(v)] for v in vals if int(v) != EMPTY_VAL]
 
     def remaining(self) -> int:
-        return self.sched.qsize()
+        return int(shq.size(self.state))
+
+
+class CostEma:
+    """Per-device EMA of observed tick cost -> grant weights in (0, 1].
+
+    ``update`` folds one round's observed costs (missing devices keep
+    their EMA — silence carries no timing); ``weights`` maps the EMA to
+    a weight relative to the fleet median (median-healthy devices get
+    1.0; a device running f-times slower gets ~1/f, floored) which
+    :mod:`repro.ft.elastic` expands per-lane and feeds the distributed
+    tick's ``lane_scale`` — the cap vector of
+    ``sharded._alloc_removes_arrays``.  The floor keeps a throttled
+    lane draining (a zero-grant lane with the global minimum would
+    unboundedly degrade the removed keys' rank; see DESIGN.md
+    §"Failure model")."""
+
+    def __init__(self, n_devices: int, *, decay: float = 0.5,
+                 floor: float = 0.25):
+        if not (0.0 < decay <= 1.0):
+            raise ValueError("decay must be in (0, 1]")
+        if not (0.0 < floor <= 1.0):
+            raise ValueError("floor must be in (0, 1]")
+        self.n_devices = n_devices
+        self.decay = decay
+        self.floor = floor
+        self.ema = np.ones((n_devices,), np.float64)
+        self._seen = np.zeros((n_devices,), bool)
+
+    def update(self, costs: Dict[int, float]) -> None:
+        for dev, c in costs.items():
+            if not (0 <= dev < self.n_devices):
+                raise ValueError(f"device {dev} out of range")
+            if self._seen[dev]:
+                self.ema[dev] = ((1 - self.decay) * self.ema[dev]
+                                 + self.decay * float(c))
+            else:               # first observation seeds the EMA directly
+                self.ema[dev] = float(c)
+                self._seen[dev] = True
+
+    def weights(self, devices: Optional[List[int]] = None) -> np.ndarray:
+        """[len(devices)] weights (default: all devices, id order)."""
+        devices = list(range(self.n_devices)) if devices is None else devices
+        seen = [d for d in devices if self._seen[d]]
+        med = float(np.median(self.ema[seen])) if seen else 1.0
+        w = np.clip(med / self.ema[devices], self.floor, 1.0)
+        return w.astype(np.float32)
 
 
 def simulate(n_items: int = 64, n_workers: int = 8,
@@ -58,9 +147,10 @@ def simulate(n_items: int = 64, n_workers: int = 8,
              seed: int = 0) -> Dict[str, float]:
     """Run the work-stealing simulation; returns makespan stats.
 
-    Baseline = static round-robin assignment; PQ = cost-priority stealing.
-    The PQ's makespan should approach the ideal (total/means) while the
-    static baseline is dominated by the straggler.
+    Baseline = static round-robin assignment; PQ = cost-priority stealing
+    through the sharded engine.  The PQ's makespan should approach the
+    ideal (total/means) while the static baseline is dominated by the
+    straggler.
     """
     rng = np.random.default_rng(seed)
     costs = rng.uniform(0.5, 1.5, n_items)

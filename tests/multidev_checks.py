@@ -5,9 +5,11 @@ init, so these cannot run in the main pytest process).
 Checks:
  1. DistShardedQueue conservation + relax bound (D=8 x l=2 lanes)
  2. DistShardedQueue(D=8, l=1) == single-device sharded_L8 (same stream)
- 3. shard_map EP MoE == local MoE (no-drop regime)
- 4. sharded train_step executes on a (2,4) mesh, ZeRO+FSDP specs applied
- 5. sharded decode step executes on a (2,4) mesh
+ 3. elastic resize: device killed mid-stream, lanes re-shard over the
+    7 survivors, conservation + shrunk-L relax bound hold throughout
+ 4. shard_map EP MoE == local MoE (no-drop regime)
+ 5. sharded train_step executes on a (2,4) mesh, ZeRO+FSDP specs applied
+ 6. sharded decode step executes on a (2,4) mesh
 
 Exit codes: 0 ok, 42 SKIP (host device count could not be forced — the
 parent pytest harness turns this into a clean skip), anything else is a
@@ -132,6 +134,59 @@ def check_dist_equiv():
     print("OK dist_equiv")
 
 
+def check_dist_resize():
+    """Kill a device mid-stream: lanes re-shard over the 7 survivors,
+    conservation and the shrunk-L relax bound hold from the first
+    post-resize tick (the subprocess twin of tests/test_dist_resize.py)."""
+    from repro.core import distributed as dq
+    from repro.core.config import PQConfig
+
+    W = 64
+    base = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16,
+                    bucket_cap=32, detach_min=4, detach_max=64,
+                    detach_init=8, chop_patience=8)
+    cfg = dq.make_dist_cfg(W, 8, 1, base=base, spare_devices=1)
+    q = dq.DistShardedQueue(cfg)
+    state = q.init(seed=6)
+    rng = np.random.default_rng(6)
+    mirror = []
+    next_val = 0
+    load_cap = (q.cfg.shard.n_lanes - 1) * q.cfg.shard.lane.par_cap // 2
+    for t in range(20):
+        if t == 7:   # the death verdict: drop device 3 of 8
+            pre = int(q.size(state))
+            q, state = q.remove_device(state, 3)
+            assert q.cfg.n_devices == 7 and q.cfg.shard.n_lanes == 7
+            assert int(q.size(state)) == pre == len(mirror), t
+        n_add = min(int(rng.integers(0, W + 1)),
+                    max(0, load_cap - len(mirror)))
+        n_rm = int(rng.integers(0, W // 2 + 1))
+        keys = np.round(rng.uniform(0, 1000, n_add), 3).astype(np.float32)
+        ak = np.full((W,), np.inf, np.float32)
+        av = np.full((W,), -1, np.int32)
+        mask = np.zeros((W,), bool)
+        ak[:n_add] = keys
+        av[:n_add] = np.arange(next_val, next_val + n_add)
+        mask[:n_add] = True
+        next_val += n_add
+
+        combined = sorted(mirror + keys.tolist())
+        c = q.relax_bound(n_rm)
+        cutoff = combined[c - 1] if c <= len(combined) else np.inf
+
+        state, res = q.tick(state, jnp.asarray(ak), jnp.asarray(av),
+                            jnp.asarray(mask), n_rm)
+        got = np.asarray(res.rm_keys)[np.asarray(res.rm_served)]
+        assert len(got) <= n_rm, t
+        for k in got:
+            assert k <= cutoff, (t, k, c, cutoff)
+            combined.remove(float(np.float32(k)))
+        mirror = combined
+        assert int(state.n_router_dropped) == 0, t
+        assert int(q.size(state)) == len(mirror), t
+    print("OK dist_resize")
+
+
 def check_moe_parity():
     from repro.configs import reduced_config
     from repro.dist.sharding import use_mesh
@@ -217,6 +272,7 @@ if __name__ == "__main__":
     checks = {
         "dist": check_dist_sharded,
         "dist_equiv": check_dist_equiv,
+        "dist_resize": check_dist_resize,
         "moe": check_moe_parity,
         "train": check_sharded_train_step,
         "decode": check_sharded_decode,

@@ -1,0 +1,239 @@
+"""Conservation across an elastic resize (drain-and-remap a dead device).
+
+The fault-injection property of ISSUE 6, pinned at D in {2, 8}: with a
+seeded device kill at an arbitrary tick, ``DistShardedQueue`` re-shards
+the dead device's lanes over the survivors and
+
+* the total served + resident multiset equals the failure-free run's
+  legal set — no lost or duplicated keys (served streams may differ:
+  the post-resize router permutation is re-derived, which is exactly
+  what "tick-for-tick permutation NOT preserved" means in DESIGN.md);
+* ``relax_bound`` at the NEW L = (D-1)*l holds from the first
+  post-resize tick (the c-relaxation contract shrinks with the mesh);
+* the router drops nothing — re-insertion of the drained lanes is
+  quota-safe (``spare_devices`` sizing in make_dist_cfg).
+
+Property-tested through hypothesis (the conftest shim when the real
+package is absent); the CI chaos leg re-runs this file under a
+PQ_CHAOS-seeded kill schedule (see ``_chaos_kill``).  Like
+tests/test_dist_sharded.py, multi-device cases skip unless the device
+count can be forced.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import PQConfig
+from repro.core import distributed as dq
+from repro.core import sharded as shq
+from repro.core.config import EMPTY_VAL
+from repro.ft import FaultSchedule, parse_chaos
+
+W = 64
+BASE = PQConfig(
+    a_max=W,
+    r_max=W,
+    seq_cap=512,
+    n_buckets=16,
+    bucket_cap=32,
+    detach_min=4,
+    detach_max=64,
+    detach_init=8,
+    chop_patience=8,
+)
+
+
+def _queue(n_devices, lanes_per_device, spare_devices=1):
+    if len(jax.devices()) < n_devices:
+        pytest.skip(
+            f"needs {n_devices} devices (have {len(jax.devices())}); "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+    cfg = dq.make_dist_cfg(
+        W, n_devices, lanes_per_device, base=BASE, spare_devices=spare_devices
+    )
+    return dq.DistShardedQueue(cfg)
+
+
+def _batch(keys, vals):
+    n = len(keys)
+    ak = np.full((W,), np.inf, np.float32)
+    av = np.full((W,), EMPTY_VAL, np.int32)
+    mask = np.zeros((W,), bool)
+    ak[:n] = keys
+    av[:n] = vals
+    mask[:n] = True
+    return jnp.asarray(ak), jnp.asarray(av), jnp.asarray(mask)
+
+
+def _served(res):
+    served = np.asarray(res.rm_served)
+    return np.asarray(res.rm_keys)[served], np.asarray(res.rm_vals)[served]
+
+
+def _chaos_kill(n_devices):
+    """(device, tick) for the seeded chaos leg, or a default pair.
+
+    PQ_CHAOS (e.g. ``seed:7``) drives the CI chaos matrix: the seeded
+    schedule's first kill event picks the victim, its fault instant the
+    tick — so one env var replays the exact failure CI saw.
+    """
+    sched = parse_chaos(n_devices=n_devices)
+    if sched is None:
+        sched = FaultSchedule.seeded(0, n_devices)
+    kills = [e for e in sched.events if e.kind == "kill"]
+    if not kills:
+        return n_devices - 1, 5
+    e = kills[0]
+    return e.device % n_devices, max(1, int(e.t0) % 16)
+
+
+def _run_resize_stream(n_devices, lanes, kill_device, kill_tick, seed, ticks=18):
+    """Drive a mixed stream, kill mid-stream, assert the invariants.
+
+    The mirror is the failure-free reference: conservation demands
+    every served key comes from it and everything else stays resident.
+    """
+    q = _queue(n_devices, lanes)
+    state = q.init(seed=seed)
+    rng = np.random.default_rng(seed)
+    mirror = []
+    served_total = 0
+    next_val = 0
+    # stay within the POST-resize structure capacity
+    lanes_after = q.cfg.shard.n_lanes - q.cfg.lanes_per_device
+    load_cap = lanes_after * q.cfg.shard.lane.par_cap // 2
+    resized = False
+    for t in range(ticks):
+        if t == kill_tick:
+            pre = int(q.size(state))
+            q, state = q.remove_device(state, kill_device)
+            resized = True
+            assert q.cfg.n_devices == n_devices - 1
+            assert q.cfg.shard.n_lanes == lanes_after
+            # the resize itself conserves: drained lanes were re-added
+            assert int(q.size(state)) == pre == len(mirror)
+        n_add = min(int(rng.integers(0, W + 1)), max(0, load_cap - len(mirror)))
+        n_rm = int(rng.integers(0, W // 2 + 1))
+        keys = np.round(rng.uniform(0, 1000, n_add), 3).astype(np.float32)
+        vals = np.arange(next_val, next_val + n_add, dtype=np.int32)
+        next_val += n_add
+
+        combined = sorted(mirror + keys.tolist())
+        c = q.relax_bound(n_rm)  # tracks the CURRENT (possibly shrunk) L
+        cutoff = combined[c - 1] if c <= len(combined) else np.inf
+
+        ak, av, am = _batch(keys, vals)
+        state, res = q.tick(state, ak, av, am, n_rm)
+        got, _ = _served(res)
+        assert len(got) <= n_rm
+        for k in got:
+            assert k <= cutoff, (
+                f"tick {t} (resized={resized}): served {k} beyond the "
+                f"c={c} smallest (cutoff {cutoff})"
+            )
+            combined.remove(float(np.float32(k)))  # must exist: conservation
+        mirror = combined
+        served_total += len(got)
+        assert int(state.n_router_dropped) == 0
+        assert int(state.lanes.stats.n_dropped.sum()) == 0
+        assert int(q.size(state)) == len(mirror)
+    assert resized
+    assert int(q.size(state)) + served_total == next_val
+
+
+@pytest.mark.parametrize("n_devices,lanes", [(2, 4), (8, 1)])
+def test_resize_conservation_seeded_kill(n_devices, lanes):
+    """The chaos-leg entry point: PQ_CHAOS picks the victim and the
+    kill tick (deterministic default otherwise)."""
+    dev, tick = _chaos_kill(n_devices)
+    _run_resize_stream(n_devices, lanes, dev, tick, seed=3)
+
+
+@given(st.integers(0, 2**16), st.integers(1, 14))
+@settings(max_examples=4)
+def test_resize_conservation_property_d2(seed, kill_tick):
+    """Kill an arbitrary device at an arbitrary tick: conservation and
+    the shrunk-L relax bound hold whatever the interleaving (D=2)."""
+    _run_resize_stream(2, 4, kill_device=seed % 2, kill_tick=kill_tick, seed=seed)
+
+
+@given(st.integers(0, 2**16), st.integers(1, 14))
+@settings(max_examples=4)
+def test_resize_conservation_property_d8(seed, kill_tick):
+    """Same property on the full 8-device matrix (one lane per device:
+    the kill drops exactly one lane's worth of state)."""
+    _run_resize_stream(8, 1, kill_device=seed % 8, kill_tick=kill_tick, seed=seed)
+
+
+def test_resize_matches_single_device_fold():
+    """dist(2 x 2).remove_device == sharded fold_lanes on the mirrored
+    single-device state: same re-derived control plane, same resident
+    multiset (the resize is placement, not new math)."""
+    q = _queue(2, 2)
+    scfg = q.cfg.shard
+    dstate = q.init(seed=9)
+    sstate = shq.init(scfg, seed=9)
+    rng = np.random.default_rng(9)
+    next_val = 0
+    for t in range(8):
+        n_add = int(rng.integers(0, W + 1))
+        n_rm = int(rng.integers(0, W // 4 + 1))
+        keys = np.round(rng.uniform(0, 1000, n_add), 3).astype(np.float32)
+        vals = np.arange(next_val, next_val + n_add, dtype=np.int32)
+        next_val += n_add
+        ak, av, am = _batch(keys, vals)
+        dstate, _ = q.tick(dstate, ak, av, am, n_rm)
+        ak, av, am = _batch(keys, vals)
+        sstate, _ = shq.tick(scfg, sstate, ak, av, am, jnp.asarray(n_rm))
+
+    q2, dstate2 = q.remove_device(dstate, 0, reinsert_drained=False)
+    scfg2, sstate2, sk, sv = shq.fold_lanes(scfg, jax.tree.map(np.asarray, sstate), [2, 3])
+    assert q2.cfg.shard.n_lanes == scfg2.n_lanes == 2
+    np.testing.assert_array_equal(np.asarray(dstate2.rng), np.asarray(sstate2.rng))
+    np.testing.assert_array_equal(np.asarray(dstate2.route), np.asarray(sstate2.route))
+    dk_, dv_, dl = shq.resident(q2.cfg.shard, jax.tree.map(np.asarray, dstate2).lanes)
+    sk_, sv_, sl = shq.resident(scfg2, sstate2.lanes)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(dk_)[np.asarray(dl)]), np.sort(np.asarray(sk_)[np.asarray(sl)])
+    )
+
+
+def test_resize_validation():
+    """Error surface that needs no extra devices (tier-1 coverage)."""
+    cfg = dq.make_dist_cfg(W, 1, 4, base=BASE)
+    q = dq.DistShardedQueue(cfg)
+    state = q.init(seed=0)
+    with pytest.raises(ValueError, match="last device"):
+        dq.resize(q.cfg, q.mesh, state, 0)
+    with pytest.raises(ValueError, match="spare_devices"):
+        dq.make_dist_cfg(W, 2, 2, base=BASE, spare_devices=2)
+    with pytest.raises(ValueError):
+        shq.fold_lanes(cfg.shard, jax.tree.map(np.asarray, state), [])
+    with pytest.raises(ValueError):
+        shq.fold_lanes(cfg.shard, jax.tree.map(np.asarray, state), [0, 0, 1])
+    with pytest.raises(ValueError):
+        shq.unfold_lanes(cfg.shard, state, 2)  # cannot shrink via unfold
+
+
+def test_unfold_lanes_roundtrip():
+    """fold then unfold restores L with empty new lanes; resident
+    multiset untouched (tier-1: pure single-device sharded)."""
+    scfg = shq.make_sharded_cfg(W, 4, base=BASE, min_lanes=2)
+    state = shq.init(scfg, seed=1)
+    rng = np.random.default_rng(1)
+    keys = np.round(rng.uniform(0, 100, W), 3).astype(np.float32)
+    ak, av, am = _batch(keys, np.arange(W, dtype=np.int32))
+    state, _ = shq.tick(scfg, state, ak, av, am, jnp.asarray(0))
+    cfg2, st2, dk, dv = shq.fold_lanes(scfg, jax.tree.map(np.asarray, state), [0, 3])
+    assert cfg2.n_lanes == 2
+    cfg3, st3 = shq.unfold_lanes(cfg2, st2, 4)
+    assert cfg3.n_lanes == 4
+    assert int(shq.size(st3)) + len(dk) == W
+    k, v, live = shq.resident(cfg3, st3.lanes)
+    got = sorted(np.asarray(k)[np.asarray(live)].tolist() + dk.tolist())
+    assert got == sorted(keys.tolist())

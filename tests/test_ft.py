@@ -9,8 +9,12 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import reduced_config
+from repro.core import distributed as dq
+from repro.core.config import EMPTY_VAL, PQConfig
 from repro.data import SyntheticLM
-from repro.ft import ElasticTrainer, FailureDetector
+from repro.ft import (CostEma, ElasticDistQueue, ElasticTrainer, FailureDetector,
+                      FaultEvent, FaultInjector, FaultSchedule, SimClock,
+                      StragglerQueue, WorkItem, parse_chaos)
 from repro.ft.straggler import simulate
 from repro.launch.train import TrainConfig, init_train_state, make_train_step
 
@@ -29,6 +33,149 @@ def test_failure_detector_lifecycle():
     out = fd.check(now=35.0)
     assert out["dead"] == {2}
     assert fd.alive() == {0, 1, 3}
+
+
+def test_failure_detector_cold_start():
+    """Regression: a fresh fleet that has NOT beaten yet must not be
+    suspected or declared dead at t=0 (the seed-era table reported
+    silent_for == +inf for never-beaten workers)."""
+    fd = FailureDetector([0, 1, 2], suspect_after=10, dead_after=30, now=0.0)
+    out = fd.check(now=0.0)
+    assert not out["suspected"] and not out["dead"]
+    out = fd.check(now=9.9)          # inside the registration grace
+    assert not out["suspected"] and not out["dead"]
+    out = fd.check(now=10.0)         # a REAL missed window still counts
+    assert out["suspected"] == {0, 1, 2}
+    out = fd.check(now=30.0)
+    assert out["dead"] == {0, 1, 2}
+    # late registration (scale-out): joining IS a beat
+    fd.beat(7, now=30.0)
+    out = fd.check(now=35.0)
+    assert 7 not in out["suspected"] and 7 in fd.alive()
+
+
+def test_failure_detector_declare_dead():
+    """Out-of-band death (bounded-retry exhaustion) bypasses the
+    heartbeat thresholds and sticks — later beats are ignored."""
+    fd = FailureDetector([0, 1], suspect_after=10, dead_after=30)
+    fd.declare_dead(1)
+    assert fd.alive() == {0}
+    fd.beat(1, now=1.0)
+    out = fd.check(now=2.0)
+    assert not out["dead"] and fd.alive() == {0}
+
+
+def test_straggler_queue_pull_order():
+    """pull(1) serves the exact global minimum (grant goes to the lane
+    holding the smallest head) and the queue drains completely."""
+    items = [WorkItem(i, float(c)) for i, c in
+             enumerate([5.0, 1.0, 3.0, 2.0, 4.0, 0.5, 6.0, 2.5])]
+    q = StragglerQueue(items, n_lanes=4, seed=0)
+    assert q.remaining() == len(items)
+    got = [q.pull(1)[0].cost for _ in range(len(items))]
+    assert got == sorted(it.cost for it in items)
+    assert q.remaining() == 0 and q.pull(1) == []
+
+
+def test_cost_ema_weights():
+    ema = CostEma(4, decay=0.5, floor=0.25)
+    assert np.allclose(ema.weights(), 1.0)     # no signal yet
+    ema.update({0: 1.0, 1: 1.0, 2: 1.0, 3: 8.0})
+    w = ema.weights()
+    assert np.allclose(w[:3], 1.0)
+    assert w[3] == pytest.approx(0.25)         # 1/8 floored at 0.25
+    # straggler heals: EMA decays toward parity
+    for _ in range(8):
+        ema.update({3: 1.0})
+    assert ema.weights()[3] > 0.9
+    with pytest.raises(ValueError):
+        ema.update({9: 1.0})
+
+
+def test_fault_schedule_and_chaos_spec():
+    a = FaultSchedule.seeded(7, 8, n_kill=2)
+    b = FaultSchedule.seeded(7, 8, n_kill=2)
+    assert a.events == b.events and len(a.events) == 2
+    assert {e.kind for e in a.events} == {"kill"}
+    # a kill is forever; windows are half-open
+    e = FaultEvent("slow", 1, 2.0, 5.0, factor=4.0)
+    assert not e.active(1.9) and e.active(2.0) and not e.active(5.0)
+    sched = parse_chaos("kill:3@8, slow:1x4@5-20, part:5@2-6")
+    assert sched.killed(3, 8.0) and not sched.killed(3, 7.9)
+    assert sched.slow_factor(1, 10.0) == 4.0
+    assert sched.partitioned(5, 2.0) and not sched.partitioned(5, 6.0)
+    assert parse_chaos("") is None
+    assert len(parse_chaos("seed:7:2", n_devices=8).events) == 2
+    with pytest.raises(ValueError):
+        parse_chaos("explode:1@2")
+
+
+def test_fault_injector_paths():
+    """kill -> silence -> suspected -> dead; slow -> cost signal only;
+    partition -> silent for the window, then heals."""
+    clock = SimClock()
+    sched = FaultSchedule([
+        FaultEvent("kill", 0, 2.0),
+        FaultEvent("slow", 1, 1.0, 100.0, factor=3.0),
+        FaultEvent("partition", 2, 3.0, 6.0),
+    ])
+    fd = FailureDetector(range(4), suspect_after=2.0, dead_after=4.0)
+    inj = FaultInjector(sched, fd, clock)
+    seen = {}
+    for _ in range(10):
+        out = inj.step()
+        seen[clock.now] = out
+        clock.advance(1.0)
+    assert 0 not in fd.alive()                   # killed at 2, dead by ~6
+    assert 2 in fd.alive()                       # partition healed at 6
+    assert any(2 in out["suspected"] for out in seen.values())
+    assert all(out["costs"].get(1, 3.0) == 3.0   # slow beats, costs 3x
+               for t, out in seen.items() if 1.0 <= t < 100.0)
+    assert all(0 not in out["costs"] for t, out in seen.items() if t >= 2.0)
+
+
+def _tiny_dist_queue(n_devices=1, width=64):
+    base = PQConfig(a_max=width, r_max=width, seq_cap=4 * width + 2,
+                    n_buckets=8, bucket_cap=width, detach_min=8,
+                    detach_max=256, detach_init=8, chop_patience=64)
+    cfg = dq.make_dist_cfg(width, n_devices, 4 // n_devices, base=base)
+    return dq.DistShardedQueue(cfg)
+
+
+def test_elastic_controller_single_device():
+    """The controller's degrade path at D=1 (tier-1: no forced devices):
+    throttling and fault bookkeeping run, the sole device can never be
+    re-sharded away, and conservation holds every round."""
+    sched = FaultSchedule([FaultEvent("slow", 0, 2.0, 8.0, factor=4.0),
+                           FaultEvent("kill", 0, 10.0)])
+    ctl = ElasticDistQueue(_tiny_dist_queue(), schedule=sched, seed=0,
+                           suspect_after=2.0, dead_after=4.0,
+                           collective_timeout=1.0, max_retries=2)
+    # the suspected-but-not-dead floor feeds lane_scale (one weight per
+    # lane; at D=1 the CostEma's fleet-relative weight is trivially 1.0,
+    # so the floor path is the one worth pinning here)
+    scale = ctl._lane_scale({0})
+    assert scale.shape == (ctl.queue.cfg.shard.n_lanes,)
+    assert np.allclose(scale, ctl.cost_ema.floor)
+    w = ctl.queue.cfg.shard.a_total
+    rng = np.random.default_rng(0)
+    submitted = served = 0
+    for r in range(12):
+        ak = rng.uniform(0, 100, w).astype(np.float32)
+        m = rng.random(w) < 0.25
+        av = np.where(m, np.arange(w, dtype=np.int32), EMPTY_VAL).astype(np.int32)
+        ak = np.where(m, ak, np.inf).astype(np.float32)
+        res, info = ctl.step(jnp.asarray(ak), jnp.asarray(av), jnp.asarray(m),
+                             jnp.asarray(8, jnp.int32))
+        submitted += int(m.sum())
+        served += int(np.asarray(res.rm_served).sum())
+        assert info["removed"] == []             # can't drop the last device
+        assert ctl.size() + served == submitted  # ... and never wedges
+    assert ctl.live == [0]
+    # the kill at t=10 makes every later collective burn its bounded
+    # retries (max_retries * collective_timeout per round) but the queue
+    # kept serving all 12 rounds
+    assert ctl.clock.now > 12.0 + 2.0
 
 
 def test_straggler_queue_beats_static():

@@ -52,6 +52,12 @@ def test_dist_sharded_equals_single_device():
 
 
 @pytest.mark.slow
+def test_dist_resize_8dev():
+    out = _run("dist_resize")
+    assert "OK dist_resize" in out
+
+
+@pytest.mark.slow
 def test_moe_expert_parallel_parity():
     out = _run("moe")
     assert "OK moe_parity" in out
