@@ -2,13 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV (the assignment's format).
 
-Figures map (DESIGN.md §9):
+Figures map (DESIGN.md §10):
   Fig. 5  -> bench_fig5_mix50       (50/50 throughput vs batch width)
   Fig. 6  -> bench_fig6_mix80       (80/20 throughput vs batch width)
   Fig. 7  -> bench_fig7_add_breakdown
   Fig. 8  -> bench_fig8_rm_breakdown
   Table 1 -> bench_table1_headmoves
-  Tables 2-3 (HTM) -> bench_tick_fusion (structural analogue, DESIGN §8)
+  Tables 2-3 (HTM) -> bench_tick_fusion (structural analogue, DESIGN §9)
   kernels -> bench_kernels (pallas-interpret vs jnp oracle wall time)
   dry-run -> bench_dryrun_summary (reads artifacts/dryrun JSONs)
 
@@ -93,7 +93,7 @@ def bench_table1_headmoves() -> None:
 
 
 def bench_tick_fusion() -> None:
-    """HTM analogue (DESIGN.md §8): the batch tick is a transaction that
+    """HTM analogue (DESIGN.md §9): the batch tick is a transaction that
     always commits; report ops committed per atomic tick vs. the paper's
     3.2-3.9 transactions *per op* under TSX."""
     from benchmarks.pq_bench import bench_mix
@@ -217,6 +217,47 @@ def bench_dist_elimination() -> None:
     _run_dist_bench(required=False)
 
 
+def _run_serve_bench(required: bool):
+    """benchmarks/serve_bench.py in a subprocess (it forces 2 host
+    devices, which must not leak into this process's jax).  Returns the
+    parsed SERVE_CELLS_JSON payload: the serving engine's SLA cells
+    (time-to-serve quantiles in SIMULATED ticks — deterministic, so the
+    gate sees latency-distribution drift, not runner noise)."""
+    import os
+    import subprocess
+    import sys
+    env = {**os.environ,
+           "PYTHONPATH": "src:" + os.environ.get("PYTHONPATH", ".")}
+    proc = subprocess.run(
+        [sys.executable, "benchmarks/serve_bench.py"],
+        capture_output=True, text=True, timeout=2400, env=env)
+    if proc.returncode != 0:
+        msg = (proc.stderr.strip().splitlines()[-1][:200]
+               if proc.stderr else "?")
+        if required:
+            raise RuntimeError(
+                f"serve bench failed (exit {proc.returncode}): {msg}\n"
+                f"{proc.stderr[-4000:]}")
+        _emit("serve_bench_failed", 0.0, msg[:80])
+        return None
+    for line in proc.stdout.strip().splitlines():
+        if line.startswith("serve_"):
+            print(line)
+    for line in proc.stdout.splitlines():
+        if line.startswith("SERVE_CELLS_JSON "):
+            return json.loads(line[len("SERVE_CELLS_JSON "):])
+    if required:
+        raise RuntimeError("serve bench produced no SERVE_CELLS_JSON line")
+    return None
+
+
+def bench_serve_sla() -> None:
+    """SLA cells of the overload-robust serving engine: steady /
+    overload / bursty / chaos-kill regimes, quantiles in simulated
+    ticks (benchmarks/serve_bench.py, subprocess)."""
+    _run_serve_bench(required=False)
+
+
 def bench_straggler() -> None:
     from repro.ft.straggler import simulate
     r = simulate(n_items=64, n_workers=8, straggler=0, slow_factor=4.0)
@@ -259,7 +300,15 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
       lanes-over-devices DistShardedQueue, D=8 × l=1), its
       elimination-off ablation, and the single-device `sharded_L8`
       reference measured in the SAME process, so the shard_map path's
-      trajectory is gated per cell like the single-device grid.
+      trajectory is gated per cell like the single-device grid;
+    * the SERVING SLA cells (`serve_*`, benchmarks/serve_bench.py in a
+      subprocess with 2 forced host devices) — time-to-serve
+      p50/p99/p99.9 of the request engine under steady, overload,
+      bursty, and chaos-kill regimes.  These quantiles are in SIMULATED
+      clock ticks (deterministic given the seed), so they are exempt
+      from the min-of-runs merge below and the gate on them catches
+      real latency-distribution drift from policy/queue/fault-path
+      edits, with widened per-quantile tolerances for the tails.
 
     Each cell entry is the best of three runs: shared boxes showed up
     to 4x ambient inflation run-to-run, and the min is the standard
@@ -327,6 +376,15 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         for name, us in cell.items():
             _emit(f"smoke_{name}_{cname}", us, "us_per_tick")
 
+    # serving SLA cells (subprocess, 2 forced host devices): quantiles
+    # in simulated ticks — REQUIRED for the same reason as dist
+    serve = _run_serve_bench(required=True)
+    serve_cells = serve["cells"]
+    for cname, cell in serve_cells.items():
+        results[cname] = cell
+        for name, ticks in cell.items():
+            _emit(f"smoke_{name}_{cname}", ticks, "time_to_serve_ticks")
+
     payload = {
         "workload": {
             "legacy_cells": {"p_add": 0.3, "key_dist": "des"},
@@ -337,6 +395,9 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
             # straight from the dist bench's own payload — the cell
             # definition has one source of truth (dist_bench.CELLS)
             "dist_cells": dist["meta"],
+            # likewise from serve_bench.CELLS; its metric field marks
+            # the serve_* cells as simulated-tick quantiles, not µs
+            "serve_cells": serve["meta"],
             "ticks": 20, "metric": "us_per_tick", "stat": "min_of_3",
             "driver": "tick_n_scan_for_pqe_and_sharded"},
         # trajectory anchors: seed/PR-1/PR-2 numbers on the p_add=0.3
@@ -358,6 +419,11 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         prev = prev_all["results"]
         prev_hits = prev_all.get("preroute_hit_per_tick", {})
         for cname, cell in payload["results"].items():
+            if cname in serve_cells:
+                # serve quantiles are deterministic simulated ticks —
+                # min-merging them with a pre-change run would splice
+                # two different latency distributions
+                continue
             for impl in cell:
                 pv = prev.get(cname, {}).get(impl, float("inf"))
                 if pv < cell[impl]:
@@ -380,11 +446,20 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
               f"|hit_per_tick={payload['preroute_hit_per_tick'][cname]}")
     for cname in dist_cells:
         cell = payload["results"][cname]
-        _emit(f"smoke_dist_overhead_{cname}", 0.0,
-              f"dist_D8/local_L8="
-              f"{cell['dist_sharded_D8'] / cell['sharded_L8']:.2f}x"
-              f"|elim_win="
-              f"{cell['dist_sharded_D8_noelim'] / cell['dist_sharded_D8']:.2f}x")
+        # not every dist cell carries every impl (the degraded cell
+        # pairs healthy/throttled only) — emit the ratios present
+        d8 = cell["dist_sharded_D8"]
+        parts = []
+        if "sharded_L8" in cell:
+            parts.append(f"dist_D8/local_L8={d8 / cell['sharded_L8']:.2f}x")
+        if "dist_sharded_D8_noelim" in cell:
+            parts.append(
+                f"elim_win={cell['dist_sharded_D8_noelim'] / d8:.2f}x")
+        if "dist_sharded_D8_degraded" in cell:
+            parts.append(
+                f"degraded/healthy="
+                f"{cell['dist_sharded_D8_degraded'] / d8:.2f}x")
+        _emit(f"smoke_dist_overhead_{cname}", 0.0, "|".join(parts))
     Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {out_path}")
 
@@ -410,6 +485,7 @@ def main() -> None:
     bench_kernels()
     bench_straggler()
     bench_dist_elimination()
+    bench_serve_sla()
     bench_dryrun_summary()
     bench_smoke_json()
 

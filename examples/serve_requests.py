@@ -1,172 +1,112 @@
-"""Serving driver: batched requests through the PQ-scheduled engine.
+"""Serving driver: open-loop request traffic through the overload-robust
+engine (repro.serving) on the distributed queue.
 
-Part 1 — single-device engine: requests arrive in waves with priorities
-(SLA classes); the scheduler's elimination fast-path admits urgent
-requests straight into free decode slots, while bulk arrivals are
-combined into the queue.
+Part 1 — single-device engine: seeded Poisson arrivals with deadline
+SLAs flow through admission control (depth cap + EDF feasibility
+shedding + bounded retry) into the elastic queue; the SLA report
+accounts every request to exactly one of served / shed / expired and
+prints time-to-serve quantiles, steady state vs overload.
 
-Part 2 — mesh dispatch: the same admission problem at fleet scale.  A
-``DistShardedQueue`` (core/distributed.py: the sharded queue's lanes
-placed across every available device via shard_map) plays the cluster
-scheduler: each tick ingests a wave of prioritized requests and drains
-as many near-minimal ones as there are free worker slots.  Balanced
-waves exercise the device-local pre-route elimination pass (urgent
-arrivals matched straight to free slots, never touching routing or the
-interconnect).  Runs on 1 device as-is; the CI tests-multidev leg runs
-it with 8 forced host devices
+Part 2 — mesh dispatch: the same engine at fleet scale.  The
+``DistShardedQueue``'s lanes are placed across every available device
+(shard_map); each tick admits a wave and serves the near-minimal
+deadlines into free worker slots.  Urgent SLA-0 requests dispatch via
+the device-local pre-route elimination pass — asserted ≤ 1 tick from
+admission.  With ``PQ_CHAOS`` set (e.g. ``seed:7`` or ``kill:3@8``;
+see repro.ft.inject.parse_chaos) the schedule's kills declare devices
+dead mid-serving: lanes drain-and-remap over the survivors and the
+final served/shed/expired partition proves zero requests were lost or
+duplicated — the CI chaos leg drives exactly this path.  Runs on 1
+device as-is; the multidev/chaos legs force 8 host devices
 (XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
     PYTHONPATH=src python examples/serve_requests.py
 """
 
-import dataclasses
-
-import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.models import transformer as tf
-from repro.serving import Request, ServeEngine
+from repro.serving import Request, build_engine, run_sla
+
+
+def _print_report(tag: str, rep: dict) -> None:
+    print(f"{tag}: {rep['arrivals']} arrivals -> {rep['served']} served / "
+          f"{rep['shed']} shed / {rep['expired']} expired "
+          f"(sheds: {rep['shed_reasons']})")
+    print(f"  time-to-serve ticks p50 {rep['p50']:.1f}  "
+          f"p99 {rep['p99']:.1f}  p99.9 {rep['p999']:.1f}   "
+          f"max depth {rep['max_depth']}/{rep['depth_cap']}")
 
 
 def main() -> None:
-    cfg = dataclasses.replace(
-        get_config("gemma-2b"), n_layers=2, d_model=128, n_heads=4,
-        n_kv_heads=1, head_dim=32, d_ff=512, vocab=512, remat="none")
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, n_slots=4, s_max=64)
-    rng = np.random.default_rng(0)
-
-    waves = [
-        [Request(rid=i, priority=float(5 + i), max_new=6)
-         for i in range(6)],                      # bulk batch
-        [Request(rid=100, priority=0.1, max_new=6)],  # urgent (eliminates)
-        [Request(rid=101 + i, priority=float(3 + i), max_new=6)
-         for i in range(4)],
-    ]
-
-    def prompt_fn(req):
-        return rng.integers(0, cfg.vocab, size=6).astype(np.int32)
-
-    completed_order = []
-    seen = set()
-    for step in range(64):
-        if step < len(waves):
-            eng.submit(waves[step])
-        eng.step(prompt_fn)
-        for rid in eng.completed:
-            if rid not in seen:
-                seen.add(rid)
-                completed_order.append(rid)
-        if len(seen) == sum(len(w) for w in waves):
-            break
-
-    print("completion order:", completed_order)
-    print("urgent request 100 finished at position",
-          completed_order.index(100))
-    stats = eng.sched.stats()
-    print("scheduler breakdown:")
-    for k in ("add_imm_elim", "add_upc_elim", "add_seq", "add_par",
-              "rm_seq", "n_movehead"):
-        print(f"  {k:14s} {stats[k]}")
+    print("single-device engine: admission control + load shedding")
+    for tag, rho in (("steady  rho=0.7", 0.7), ("overload rho=1.5", 1.5)):
+        eng = build_engine(rho=rho, n_slots=8, seed=0, depth_cap=48,
+                           pattern="poisson")
+        rep = run_sla(eng, 300)
+        _print_report(tag, rep)
+        assert rep["served"] + rep["shed"] + rep["expired"] == \
+            rep["arrivals"], "outcome partition broken"
+        assert rep["max_depth"] <= 48, "admission cap violated"
+    print("  (overload sheds explicitly at admission; depth stays capped)")
 
 
 def main_mesh() -> None:
-    """Fleet-scale dispatch: DistShardedQueue as the cluster scheduler.
-
-    With ``PQ_CHAOS`` set (e.g. ``seed:7`` or ``kill:3@8``; see
-    repro.ft.inject.parse_chaos) the first kill event in the schedule
-    declares that device dead mid-run: its lanes drain-and-remap over
-    the survivors and the conservation assert below covers the resize —
-    the CI chaos leg drives exactly this path.
-    """
-    from repro.core import distributed as dq
-    from repro.core.config import EMPTY_VAL, PQConfig
+    """Fleet-scale dispatch, chaos-tolerant (the CI legs' entry point)."""
+    import numpy as np
     from repro.ft import parse_chaos
 
     n_devices = len(jax.devices())
-    W = 128                      # request-wave width (op batch per tick)
-    n_workers = 32               # decode slots freed (≈ served) per tick
-    base = PQConfig(a_max=W, r_max=W, seq_cap=1024, n_buckets=16,
-                    bucket_cap=64, detach_min=8, detach_max=256,
-                    detach_init=16, chop_patience=8)
-    q = dq.DistShardedQueue(
-        dq.make_dist_cfg(W, n_devices, 2, base=base,
-                         spare_devices=1 if n_devices > 1 else 0))
-    state = q.init(seed=0)
-    print(f"\nmesh dispatch: {n_devices} device(s) x "
-          f"{q.cfg.lanes_per_device} lanes, wave width {W}, "
-          f"{n_workers} worker slots/tick")
+    schedule = parse_chaos(n_devices=n_devices) if n_devices > 1 else None
+    n_kill = sum(1 for e in schedule.events if e.kind == "kill") \
+        if schedule is not None else 0
+    eng = build_engine(
+        n_devices=n_devices, lanes_per_device=2, width=128, rho=0.9,
+        n_slots=32, seed=0, schedule=schedule,
+        spare_devices=min(n_kill, n_devices - 1), depth_cap=192,
+        sla_mean=50.0, sla_min=20.0, preroute="on")
+    print(f"\nmesh dispatch: {n_devices} device(s) x 2 lanes, wave width "
+          f"{eng.width}, {eng.n_slots} worker slots/tick"
+          + (f", chaos schedule with {n_kill} kill(s)" if n_kill else ""))
 
-    kill_step = kill_dev = None
-    chaos = parse_chaos(n_devices=n_devices)
-    if chaos is not None and n_devices > 1:
-        kills = [e for e in chaos.events if e.kind == "kill"]
-        if kills:
-            kill_dev = kills[0].device % n_devices
-            kill_step = max(1, int(kills[0].t0) % 20)
-            print(f"chaos: device {kill_dev} will die at wave {kill_step}")
-
-    rng = np.random.default_rng(0)
-    submitted = 0
-    dispatched = 0
-    urgent_submit = {}           # rid -> submit step
-    urgent_latency = []          # dispatch latency in ticks
-    clock = 0.0
+    # urgent SLA-0 probes ride along every 4th wave; measure dispatch
+    # latency in ENGINE TICKS (the clock also absorbs fault burns)
+    urgent_submit = {}     # rid -> tick submitted
+    urgent_latency = []
+    removed = []
     for step in range(24):
-        if step == kill_step:
-            pre = int(q.size(state))
-            q, state = q.remove_device(state, kill_dev)
-            assert int(q.size(state)) == pre, "resize lost requests!"
-            print(f"device {kill_dev} dead at wave {step}: lanes "
-                  f"re-sharded over {q.cfg.n_devices} survivors "
-                  f"({pre} backlogged requests conserved)")
-        # bulk arrivals: priority ~ deadline (DES hold model: a bit
-        # above the current virtual clock); arrival rate ~ service rate
-        # (the balanced regime where elimination thrives, and standing
-        # backlog stays inside lane capacity); an urgent SLA-0 request
-        # every 4th wave
-        n_bulk = int(rng.integers(n_workers // 2, 3 * n_workers // 2))
-        prio = clock + rng.exponential(50.0, n_bulk).astype(np.float32)
-        rid = np.arange(submitted, submitted + n_bulk, dtype=np.int32)
+        wave = eng.arrivals.wave()
         if step % 4 == 0:
-            urgent_id = submitted + n_bulk
-            prio = np.append(prio, np.float32(0.0))   # beats everything
-            rid = np.append(rid, np.int32(urgent_id))
-            urgent_submit[urgent_id] = step
-        submitted += len(rid)
-        ak = np.full((W,), np.inf, np.float32)
-        av = np.full((W,), EMPTY_VAL, np.int32)
-        mask = np.zeros((W,), bool)
-        ak[:len(rid)] = prio
-        av[:len(rid)] = rid
-        mask[:len(rid)] = True
-        state, res = q.tick(state, jnp.asarray(ak), jnp.asarray(av),
-                            jnp.asarray(mask), n_workers)
-        served = np.asarray(res.rm_served)
-        vals = np.asarray(res.rm_vals)[served]
-        dispatched += len(vals)
-        clock += n_workers * 50.0 / max(int(q.size(state)), 1)
-        for rid_ in vals:
-            if int(rid_) in urgent_submit:
-                urgent_latency.append(step - urgent_submit.pop(int(rid_)))
+            rid = 10_000_000 + step
+            now = eng.clock.now
+            wave.append(Request(rid=rid, arrival=now,
+                                deadline=now + eng.policy.tick_dt))
+            urgent_submit[rid] = eng.n_ticks
+        info = eng.tick(wave=wave)
+        removed += info["removed"]
+        for rid in list(urgent_submit):
+            if rid in info["served_rids"]:
+                urgent_latency.append(eng.n_ticks - 1 - urgent_submit.pop(rid))
+    if removed:
+        print(f"chaos: device(s) {removed} died mid-serving; lanes "
+              f"re-sharded over {len(eng.queue.live)} survivors")
+    rep = run_sla(eng, 0)   # drain + flush: exact partition
+    _print_report("mesh", rep)
 
-    st = q.stats(state)
-    backlog = int(q.size(state))
-    assert dispatched + backlog == submitted, "request leak!"
-    print(f"submitted {submitted}, dispatched {dispatched}, "
-          f"backlog {backlog} (conserved)")
+    # zero lost or duplicated requests across the resize: duplicates
+    # raise inside the engine; losses would break this partition
+    assert rep["served"] + rep["shed"] + rep["expired"] == rep["arrivals"]
+    assert rep["in_flight"] == 0 and rep["retry_pending"] == 0
+    if n_kill and n_devices > 1:
+        assert len(removed) == n_kill, "scheduled kill never fired"
+    # urgent SLA-0 requests dispatch within one tick of admission (the
+    # pre-route elimination path: matched to a slot before routing)
     assert not urgent_submit, f"urgent requests stuck: {urgent_submit}"
-    # urgent requests dispatch within a tick of arrival (same tick once
-    # the queue carries a frontier; tick 0's empty queue makes EVERY add
-    # eligible, so slot-order elimination may serve 32 others first)
     assert max(urgent_latency) <= 1, urgent_latency
     print(f"urgent dispatch latency (ticks): {urgent_latency}")
+    st = eng.queue_stats()
     print(f"pre-route eliminations (never routed): "
-          f"{int(st.n_preroute_elim)} over {int(st.n_ticks)} ticks "
-          f"(gate ema {float(st.elim_ema):.2f})")
-    print(f"lane backlog: {np.asarray(q.lane_sizes(state)).tolist()}")
+          f"{int(st.n_preroute_elim)} over {int(st.n_ticks)} ticks")
+    print(f"queue depth at exit: {int(st.depth)} (drained)")
 
 
 if __name__ == "__main__":

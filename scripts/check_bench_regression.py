@@ -16,6 +16,16 @@ cancels out.  Normalization never crosses cells: a PR that speeds up
 the balanced-mix cells must not make the unbalanced cells look
 relatively slower.
 
+The ``serve_*`` SLA cells hold time-to-serve quantiles (p50/p99/p99.9)
+in SIMULATED clock ticks — deterministic and machine-independent, so
+they skip the machine normalization entirely and gate on RAW ratios
+(normalizing would let a drifting tail drag the cell's other quantiles
+and mask itself).  Tail quantiles still legitimately move much more
+than medians under benign policy edits, so the per-key tolerance
+widens for them: p99.9 gates at max(--tol, 150%) and p99 at
+max(--tol, 75%); p50 keeps the default.  ("p999" is matched before
+"p99" — substring order matters.)
+
 Caveat: within a cell the normalization couples impls — a PR that
 intentionally speeds up SOME impls shifts the geomean and makes the
 untouched ones look relatively slower.  That is by design: any PR that
@@ -40,8 +50,22 @@ import sys
 
 
 def _normalized(cell: dict, keys: list) -> dict:
-    gm = math.exp(sum(math.log(cell[k]) for k in keys) / len(keys))
-    return {k: cell[k] / gm for k in keys}
+    # floor keeps a legitimate 0-tick serve quantile out of log()
+    vals = {k: max(cell[k], 1e-6) for k in keys}
+    gm = math.exp(sum(math.log(v) for v in vals.values()) / len(vals))
+    return {k: v / gm for k, v in vals.items()}
+
+
+def _impl_tol(impl: str, tol: float) -> float:
+    """Per-key tolerance: tail quantiles of the serve_* SLA cells swing
+    far more than medians under legitimate policy edits, so they get a
+    wider gate.  Check "p999" BEFORE "p99" — the latter is a substring
+    of the former."""
+    if "p999" in impl:
+        return max(tol, 1.50)
+    if "p99" in impl:
+        return max(tol, 0.75)
+    return tol
 
 
 def _markdown_table(rows, tol) -> str:
@@ -94,19 +118,32 @@ def main() -> int:
     for cell_name in sorted(set(base) & set(fresh)):
         bcell, fcell = base[cell_name], fresh[cell_name]
         shared = sorted(set(bcell) & set(fcell))
-        if len(shared) < 2:
-            print(f"{cell_name}: <2 shared impls, skipping")
-            continue
-        bn = _normalized(bcell, shared)
-        fn = _normalized(fcell, shared)
+        raw = cell_name.startswith("serve_")
+        if raw:
+            # serve_* quantiles are deterministic SIMULATED ticks —
+            # machine-independent, so there is no machine factor to
+            # cancel, and geomean normalization would let one drifting
+            # quantile drag the cell's other quantiles with it.  Gate
+            # each on its raw ratio.
+            bn = {k: max(bcell[k], 1e-6) for k in shared}
+            fn = {k: max(fcell[k], 1e-6) for k in shared}
+        else:
+            if len(shared) < 2:
+                print(f"{cell_name}: <2 shared impls, skipping")
+                continue
+            bn = _normalized(bcell, shared)
+            fn = _normalized(fcell, shared)
         for impl in shared:
             ratio = fn[impl] / bn[impl]
-            flag = "REGRESSION" if ratio > 1 + args.tol else "ok"
-            print(f"{cell_name}/{impl}: normalized {bn[impl]:.3f} -> "
-                  f"{fn[impl]:.3f} (x{ratio:.2f}) {flag}")
+            tol = _impl_tol(impl, args.tol)
+            flag = "REGRESSION" if ratio > 1 + tol else "ok"
+            widened = f" (tol {tol:.0%})" if tol != args.tol else ""
+            label = "raw_ticks" if raw else "normalized"
+            print(f"{cell_name}/{impl}: {label} {bn[impl]:.3f} -> "
+                  f"{fn[impl]:.3f} (x{ratio:.2f}) {flag}{widened}")
             rows.append((cell_name, impl, bcell[impl], fcell[impl],
                          ratio, flag))
-            if ratio > 1 + args.tol:
+            if ratio > 1 + tol:
                 failures.append((cell_name, impl, ratio))
         for impl in sorted(set(bcell) ^ set(fcell)):
             where = "baseline" if impl in bcell else "fresh"
@@ -120,8 +157,9 @@ def main() -> int:
             f.write(_markdown_table(rows, args.tol) + "\n")
 
     if failures:
-        print(f"\nFAIL: {len(failures)} impl(s) regressed more than "
-              f"{args.tol:.0%} (machine-normalized within their cell):")
+        print(f"\nFAIL: {len(failures)} impl(s) regressed beyond their "
+              f"tolerance (base {args.tol:.0%}; p99/p999 keys gate at "
+              "75%/150%; machine-normalized within their cell):")
         for cell, impl, ratio in failures:
             print(f"  {cell}/{impl}: x{ratio:.2f}")
         print("If this PR changed performance on purpose (including "

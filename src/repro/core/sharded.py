@@ -790,6 +790,12 @@ class ShardedStats(NamedTuple):
     n_ticks: jnp.ndarray            # sharded ticks (== tick_idx)
     elim_ema: jnp.ndarray           # controller signals, as of now
     balance_ema: jnp.ndarray
+    # serving observability (repro.serving): the admission controller
+    # gates on queue depth, and with priority = deadline the union
+    # min-of-lane-heads IS the next-to-serve deadline — its distance
+    # from the serving clock is the age/slack of the queue frontier.
+    depth: jnp.ndarray              # total resident elements (== size())
+    min_head: jnp.ndarray           # union min of lane heads (INF if empty)
 
 
 def stats(state: ShardedState) -> ShardedStats:
@@ -802,6 +808,8 @@ def stats(state: ShardedState) -> ShardedStats:
         n_ticks=state.tick_idx,
         elim_ema=state.elim_ema,
         balance_ema=state.balance_ema,
+        depth=size(state),
+        min_head=_union_min(state.lanes),
     )
 
 

@@ -1,7 +1,7 @@
 """Loss-prioritized curriculum sampling on the adaptive priority queue.
 
 The second framework integration of the paper's structure (after the
-serving scheduler): example *groups* (shards of the stream) carry a
+serving engine): example *groups* (shards of the stream) carry a
 priority key = -EMA(loss) + staleness bonus.  Each training step:
 
 * ``removeMin() × k`` selects the next groups to train on (highest loss
@@ -19,10 +19,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PQConfig
-from repro.serving.scheduler import PQScheduler, Request
+from repro.core import PQConfig, init, tick
+from repro.core.config import EMPTY_VAL
 
 
 @dataclasses.dataclass
@@ -32,6 +33,54 @@ class GroupStat:
     last_step: int = 0
 
 
+class _HostPQ:
+    """Host loop over the single-queue device tick (submit arrivals,
+    acquire up to k minima per step).  The sampler is a single-host
+    curriculum structure, so it stays on the plain ``repro.core`` queue
+    rather than the distributed serving engine (repro.serving now
+    targets the elastic mesh; this private wrapper replaced the seed
+    scheduler it used to import)."""
+
+    def __init__(self, cfg: Optional[PQConfig] = None):
+        self.cfg = cfg or PQConfig(
+            a_max=64, r_max=64, seq_cap=1024, n_buckets=32, bucket_cap=64,
+            detach_min=8, detach_max=512, detach_init=32)
+        self.state = init(self.cfg)
+        self.pending = 0
+
+    def submit_and_acquire(self, arrivals: List[tuple],
+                           free_slots: int) -> List[int]:
+        """One tick: enqueue ``(gid, key)`` pairs, dequeue up to
+        ``free_slots`` gids in key order.  Elimination / combining
+        happen inside the device tick; the Fig. 7/8-style breakdown is
+        available via :meth:`stats`."""
+        cap = self.cfg.par_cap - self.pending
+        if len(arrivals) > min(cap, self.cfg.a_max):
+            raise ValueError(
+                f"admission overflow: {len(arrivals)} arrivals, capacity "
+                f"{min(cap, self.cfg.a_max)} — backpressure upstream")
+        ak = np.full((self.cfg.a_max,), np.inf, np.float32)
+        av = np.full((self.cfg.a_max,), EMPTY_VAL, np.int32)
+        mask = np.zeros((self.cfg.a_max,), bool)
+        for i, (gid, key) in enumerate(arrivals):
+            ak[i] = key
+            av[i] = gid
+            mask[i] = True
+        self.pending += len(arrivals)
+        n_rm = min(free_slots, self.cfg.r_max)
+        self.state, res = tick(self.cfg, self.state, jnp.asarray(ak),
+                               jnp.asarray(av), jnp.asarray(mask),
+                               jnp.asarray(n_rm, jnp.int32))
+        got = np.asarray(res.rm_vals)[np.asarray(res.rm_served)]
+        out = [int(g) for g in got.tolist() if g != EMPTY_VAL]
+        self.pending -= len(out)
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        s = self.state.stats
+        return {k: int(getattr(s, k)) for k in s._fields}
+
+
 class PrioritySampler:
     def __init__(self, n_groups: int, *, ema: float = 0.9,
                  staleness_weight: float = 0.01,
@@ -39,11 +88,11 @@ class PrioritySampler:
         self.groups = {g: GroupStat(g) for g in range(n_groups)}
         self.ema = ema
         self.staleness_weight = staleness_weight
-        self.sched = PQScheduler(cfg)
+        self.sched = _HostPQ(cfg)
         self.step = 0
         # enqueue everything initially with random tie-break
         rng = np.random.default_rng(seed)
-        arrivals = [Request(rid=g, priority=float(-10.0 + 1e-3 * rng.random()))
+        arrivals = [(g, float(-10.0 + 1e-3 * rng.random()))
                     for g in self.groups]
         self.sched.submit_and_acquire(arrivals, 0)
 
@@ -52,8 +101,7 @@ class PrioritySampler:
         return float(-(g.ema_loss + stale))
 
     def next_groups(self, k: int) -> List[int]:
-        got = self.sched.submit_and_acquire([], k)
-        return [r.rid for r in got]
+        return self.sched.submit_and_acquire([], k)
 
     def report(self, gid: int, loss: float) -> None:
         g = self.groups[gid]
@@ -62,8 +110,7 @@ class PrioritySampler:
 
     def requeue(self, gids: List[int]) -> None:
         self.step += 1
-        arrivals = [Request(rid=g, priority=self._key(self.groups[g]))
-                    for g in gids]
+        arrivals = [(g, self._key(self.groups[g])) for g in gids]
         self.sched.submit_and_acquire(arrivals, 0)
 
     def breakdown(self) -> Dict[str, int]:

@@ -83,11 +83,27 @@ class ElasticDistQueue:
         self.tick_dt = float(tick_dt)
         self.collective_timeout = float(collective_timeout)
         self.max_retries = int(max_retries)
+        self._last_scale: Optional[np.ndarray] = None
 
     # -- introspection -----------------------------------------------------
 
     def size(self) -> int:
         return int(self.queue.size(self.state))
+
+    def stats(self):
+        """Device-side ShardedStats of the current state (incl. the
+        serving observability fields depth / min_head)."""
+        return self.queue.stats(self.state)
+
+    def capacity_scale(self) -> float:
+        """Mean grant-throttle fraction over live lanes from the LAST
+        tick (1.0 before the first): the degraded-mode signal the
+        serving layer feeds into admission feasibility — a throttled
+        mesh serves fewer requests per tick, so deadlines that were
+        feasible at full health may need shedding."""
+        if self._last_scale is None:
+            return 1.0
+        return float(np.mean(self._last_scale))
 
     def relax_bound(self, rm_count: int) -> int:
         """Current-mesh rank bound (L shrinks with the mesh)."""
@@ -147,6 +163,7 @@ class ElasticDistQueue:
         removed += self._await_collective()
         suspected = {d for d in verdict["suspected"] if d in self.live}
         scale = self._lane_scale(suspected)
+        self._last_scale = np.asarray(scale)
         self.state, res = self.queue.tick(
             self.state, add_keys, add_vals, add_mask, rm_count,
             jnp.asarray(scale))

@@ -1,4 +1,14 @@
-from repro.serving.scheduler import PQScheduler, Request
-from repro.serving.engine import ServeEngine
+from repro.serving.arrivals import (
+    ArrivalProcess, BurstyArrivals, DiurnalArrivals, PoissonArrivals, Request)
+from repro.serving.engine import RequestEngine
+from repro.serving.scheduler import (
+    EXPIRED, SERVED, SHED, SHED_DEPTH, SHED_INFEASIBLE, SHED_RETRY,
+    AdmissionController, OverloadPolicy, ShedEvent)
+from repro.serving.sla import build_engine, run_sla
 
-__all__ = ["PQScheduler", "Request", "ServeEngine"]
+__all__ = [
+    "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",
+    "Request", "RequestEngine", "AdmissionController", "OverloadPolicy",
+    "ShedEvent", "SERVED", "SHED", "EXPIRED", "SHED_DEPTH",
+    "SHED_INFEASIBLE", "SHED_RETRY", "build_engine", "run_sla",
+]

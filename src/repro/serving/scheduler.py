@@ -1,99 +1,209 @@
-"""Priority request scheduler — the paper's use case, verbatim.
+"""Overload policy: deadline admission control, load shedding, backpressure.
 
-"Parallel priority queues are often used in ... resource management, such
-as operating systems schedulers."  Here the resource is decode slots in a
-continuous-batching engine:
+The queue itself (repro.core.distributed / repro.ft.elastic) never
+wedges — every tick serves up to ``rm_count`` near-minimal deadlines
+whatever the backlog.  What overload CAN destroy is the latency
+distribution served: an unbounded backlog turns every admitted request
+into a late one.  This module is the client-facing policy that keeps
+the distribution bounded, with one hard rule — **reject, don't wedge,
+and never silently**: every arrival the engine cannot serve gets an
+explicit SHED outcome at admission time, instead of rotting in a queue
+it will never leave.
 
-* an arriving request is ``PQ::add(priority)`` (priority = deadline /
-  SLA class / arrival time — smaller is more urgent);
-* each engine step frees k slots and performs k × ``PQ::removeMin()``;
-* **elimination**: an arriving request with priority better than the queue
-  minimum pairs directly with a free slot — it never touches the queue
-  (the paper's add/removeMin elimination, with the same eligibility rule);
-* **combining**: the per-step admissions are batched into one tick (the
-  server-thread batch);
-* the adaptive sequential part holds the next-to-run requests; bulk
-  arrivals with poor priorities scatter into the parallel part.
+Three mechanisms, applied per arrival in deadline (EDF) order:
 
-Admission control bounds outstanding requests by the structure capacity
-(TPU-resident states are statically shaped).
+* **depth admission control** — queue depth is capped at
+  ``depth_cap``; arrivals beyond the cap are shed with reason
+  ``depth``.  Depth-shed requests are the RETRYABLE class (capacity
+  may free up): they back off ``retry_backoff`` ticks and re-offer, at
+  most ``max_retries`` times (bounded backpressure), then shed finally
+  with reason ``retry``.
+* **deadline-infeasibility shedding** — the queue serves earliest
+  deadline first, so an arrival's expected wait is its deadline's RANK
+  among outstanding deadlines divided by the serve rate.  If ``now +
+  ceil((rank + 1) / serve_rate) * tick_dt * slack > deadline`` the
+  deadline cannot be met even if everything goes right; the request is
+  shed with reason ``infeasible`` immediately (no retry: feasibility
+  only decays with time).  An urgent request (deadline at the queue
+  frontier) has rank 0 and is always feasible — it dispatches via
+  pre-route elimination the same tick, which this estimate prices as
+  one tick.
+* **degraded-mode coupling** — ``serve_rate`` is the HEALTHY capacity;
+  when the fault layer throttles grants (``lane_scale``), the engine
+  lowers the controller's effective rate via ``set_capacity_scale`` so
+  feasibility estimates track what the mesh can actually serve.
+
+The controller is pure host-side policy (numpy over the engine's
+in-flight deadline set) — it never touches the device queue, so it is
+unit-testable without a mesh and costs O(wave * log depth) per tick.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import math
+from typing import Dict, List, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PQConfig, init, tick
-from repro.core.config import EMPTY_VAL
+from repro.serving.arrivals import Request
+
+#: terminal outcomes — every request ends in exactly one (DESIGN.md §8:
+#: served/shed/expired is a partition of the arrival stream)
+SERVED = "served"
+SHED = "shed"
+EXPIRED = "expired"
+
+#: shed reasons (observability: a shed is never silent)
+SHED_DEPTH = "depth"          # admission cap hit (retryable)
+SHED_INFEASIBLE = "infeasible"  # deadline unmeetable at admission
+SHED_RETRY = "retry"          # retry budget exhausted
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Static knobs of the admission controller.
+
+    ``serve_rate`` is requests served per tick at full health (the
+    engine's ``n_slots``); ``depth_cap`` bounds outstanding admitted
+    requests (must stay under the queue's structural capacity so the
+    router never drops); ``slack`` > 1 sheds earlier (conservative
+    feasibility), < 1 later (optimistic).
+    """
+
+    depth_cap: int
+    serve_rate: float
+    tick_dt: float = 1.0
+    slack: float = 1.0
+    max_retries: int = 2
+    retry_backoff: float = 2.0   # ticks a depth-shed request backs off
+
+    def __post_init__(self) -> None:
+        if self.depth_cap < 1:
+            raise ValueError("depth_cap must be >= 1")
+        if self.serve_rate <= 0:
+            raise ValueError("serve_rate must be > 0")
+        if self.tick_dt <= 0:
+            raise ValueError("tick_dt must be > 0")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    priority: float
-    prompt_len: int = 0
-    max_new: int = 32
-    # engine bookkeeping
-    slot: int = -1
-    generated: int = 0
+class ShedEvent:
+    """A terminal shed: the explicit outcome record (never silent)."""
+
+    request: Request
+    reason: str
+    time: float
 
 
-class PQScheduler:
-    """Host-side wrapper driving the device-resident BatchPQ."""
+class AdmissionController:
+    """Stateful admission: depth cap + EDF feasibility + bounded retry.
 
-    def __init__(self, cfg: Optional[PQConfig] = None):
-        self.cfg = cfg or PQConfig(
-            a_max=64, r_max=64, seq_cap=1024, n_buckets=32, bucket_cap=64,
-            detach_min=8, detach_max=512, detach_init=32)
-        self.state = init(self.cfg)
-        self.requests: Dict[int, Request] = {}
-        self.pending = 0
+    The caller (engine) owns ground truth on depth and in-flight
+    deadlines; the controller owns the retry buffer and the decision
+    rule.  ``admit`` processes one tick's offered wave and returns
+    ``(admitted, shed_events)`` — requests not in either are parked in
+    the retry buffer and will re-offer themselves on a later tick
+    (``pending`` counts them; conservation accounting must include
+    them until they terminate).
+    """
 
-    # -- queue ops --------------------------------------------------------
+    def __init__(self, policy: OverloadPolicy):
+        self.policy = policy
+        self._retry: List[Tuple[float, int, Request]] = []  # (due, rid, req)
+        self._capacity_scale = 1.0
+        self.n_offered = 0
+        self.n_retried = 0
+        self.shed_reasons: Dict[str, int] = {
+            SHED_DEPTH: 0, SHED_INFEASIBLE: 0, SHED_RETRY: 0}
 
-    def submit_and_acquire(self, arrivals: List[Request],
-                           free_slots: int) -> List[Request]:
-        """One tick: enqueue arrivals, dequeue up to free_slots requests.
+    # -- degraded-mode coupling -------------------------------------------
 
-        Returns the admitted requests in priority order.  Elimination and
-        combining happen inside the device tick; Fig. 7/8-style breakdown
-        is available via .stats().
+    def set_capacity_scale(self, scale: float) -> None:
+        """Feed the fault layer's grant-throttle fraction (mean
+        ``lane_scale``) into feasibility estimates: a degraded mesh
+        serves fewer requests per tick, so deadlines that were feasible
+        at full health may now need shedding."""
+        self._capacity_scale = float(np.clip(scale, 0.05, 1.0))
+
+    @property
+    def effective_rate(self) -> float:
+        return self.policy.serve_rate * self._capacity_scale
+
+    # -- retry buffer ------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Requests parked for retry (neither admitted nor terminal)."""
+        return len(self._retry)
+
+    def _due_retries(self, now: float) -> List[Request]:
+        due = [r for (t, _, r) in self._retry if t <= now]
+        self._retry = [e for e in self._retry if e[0] > now]
+        return due
+
+    def _park_or_shed(self, req: Request, now: float,
+                      shed: List[ShedEvent]) -> None:
+        pol = self.policy
+        if req.retries >= pol.max_retries:
+            # terminal: never retried -> plain depth shed; budget burned
+            # -> retry-exhausted shed (both explicit, never silent)
+            reason = SHED_RETRY if req.retries > 0 else SHED_DEPTH
+            self.shed_reasons[reason] += 1
+            shed.append(ShedEvent(req, reason, now))
+            return
+        retry = dataclasses.replace(req, retries=req.retries + 1)
+        due = now + pol.retry_backoff * pol.tick_dt
+        bisect.insort(self._retry, (due, retry.rid, retry))
+        self.n_retried += 1
+
+    # -- the decision rule -------------------------------------------------
+
+    def admit(self, wave: List[Request], inflight_deadlines: np.ndarray,
+              depth: int, now: float, max_admit: int,
+              ) -> Tuple[List[Request], List[ShedEvent]]:
+        """One tick's admission decision.
+
+        ``inflight_deadlines`` must be SORTED ascending (the engine
+        keeps it); ``depth`` is its length; ``max_admit`` caps this
+        tick's admissions at the op-batch width W.  Due retries join
+        the offered wave automatically.  Returns the admitted requests
+        (deadline order) and the terminal shed events; depth-shed
+        retryables are parked internally.
         """
-        cap = self.cfg.par_cap - self.pending
-        if len(arrivals) > min(cap, self.cfg.a_max):
-            raise ValueError(
-                f"admission overflow: {len(arrivals)} arrivals, capacity "
-                f"{min(cap, self.cfg.a_max)} — backpressure upstream")
-        ak = np.full((self.cfg.a_max,), np.inf, np.float32)
-        av = np.full((self.cfg.a_max,), EMPTY_VAL, np.int32)
-        mask = np.zeros((self.cfg.a_max,), bool)
-        for i, r in enumerate(arrivals):
-            ak[i] = r.priority
-            av[i] = r.rid
-            mask[i] = True
-            self.requests[r.rid] = r
-        self.pending += len(arrivals)
-
-        n_rm = min(free_slots, self.cfg.r_max)
-        self.state, res = tick(self.cfg, self.state, jnp.asarray(ak),
-                               jnp.asarray(av), jnp.asarray(mask),
-                               jnp.asarray(n_rm, jnp.int32))
-        served = np.asarray(res.rm_vals)[np.asarray(res.rm_served)]
-        out = []
-        for rid in served.tolist():
-            if rid == EMPTY_VAL:
+        pol = self.policy
+        offered = self._due_retries(now) + list(wave)
+        self.n_offered += sum(1 for r in offered if r.retries == 0)
+        offered.sort(key=lambda r: (r.deadline, r.rid))
+        admitted: List[Request] = []
+        shed: List[ShedEvent] = []
+        rate = self.effective_rate
+        for req in offered:
+            if len(admitted) >= max_admit or depth + len(admitted) >= \
+                    pol.depth_cap:
+                self._park_or_shed(req, now, shed)
                 continue
-            self.pending -= 1
-            out.append(self.requests.pop(rid))
+            # EDF rank: in-flight deadlines ahead of this one, plus the
+            # earlier-deadline admissions of this same wave (the list is
+            # processed in deadline order, so that is all of `admitted`)
+            rank = int(np.searchsorted(inflight_deadlines, req.deadline))
+            rank += len(admitted)
+            est_ticks = math.ceil((rank + 1) / rate)
+            est_serve = now + est_ticks * pol.tick_dt * pol.slack
+            if est_serve > req.deadline + 1e-9:
+                self.shed_reasons[SHED_INFEASIBLE] += 1
+                shed.append(ShedEvent(req, SHED_INFEASIBLE, now))
+                continue
+            admitted.append(req)
+        return admitted, shed
+
+    def flush(self, now: float) -> List[ShedEvent]:
+        """Terminate every parked retry (end-of-run accounting: the
+        served/shed/expired partition must cover the retry buffer)."""
+        out = [ShedEvent(r, SHED_RETRY, now) for (_, _, r) in self._retry]
+        self.shed_reasons[SHED_RETRY] += len(out)
+        self._retry = []
         return out
-
-    def qsize(self) -> int:
-        return int(self.state.seq_len) + int(self.state.par_count)
-
-    def stats(self) -> Dict[str, int]:
-        s = self.state.stats
-        return {k: int(getattr(s, k)) for k in s._fields}

@@ -233,3 +233,118 @@ def test_data_pipeline_seekable():
     # labels are next-token targets with the tail masked
     np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
     assert np.all(a["labels"][:, -1] == -1)
+
+
+# -- reinsert chunking (the remap half of drain-and-remap) -----------------
+
+
+def _resident_keys(q, state):
+    import repro.core.sharded as shq
+    k, _, live = shq.resident(q.cfg.shard,
+                              jax.tree.map(np.asarray, state).lanes)
+    return np.sort(np.asarray(k)[np.asarray(live)])
+
+
+def test_reinsert_full_width_single_round():
+    """When survivor quotas cover the batch width (ceil(W/L) <= a_max),
+    reinsert places the whole drained batch in ONE rm_count=0 tick."""
+    q = _tiny_dist_queue()
+    state = q.init(seed=0)
+    rng = np.random.default_rng(4)
+    keys = np.round(rng.uniform(0, 100, 40), 3).astype(np.float32)
+    vals = np.arange(40, dtype=np.int32)
+    pre = int(np.asarray(state.tick_idx))
+    state = dq.reinsert(q, state, keys, vals)
+    assert int(np.asarray(state.tick_idx)) - pre == 1
+    np.testing.assert_array_equal(_resident_keys(q, state), np.sort(keys))
+
+
+def test_reinsert_amax_chunk_fallback():
+    """PR-5 landed the fallback path untested: when per-lane a_max
+    cannot absorb ceil(W/L) adds, reinsert must fall back to a_max-sized
+    chunks — more rm_count=0 rounds, zero router drops, same multiset."""
+    q0 = _tiny_dist_queue()     # W=64, 4 lanes, a_max=16 -> full width
+    scfg = q0.cfg.shard
+    assert -(-scfg.a_total // scfg.n_lanes) <= scfg.lane.a_max
+    # shrink the per-lane add quota below ceil(W/L): even a worst-case
+    # route permutation cannot overflow an 8-wide chunk
+    lane = dataclasses.replace(scfg.lane, a_max=8)
+    cfg = dataclasses.replace(q0.cfg, shard=dataclasses.replace(
+        scfg, lane=lane))
+    q = dq.DistShardedQueue(cfg)
+    state = q.init(seed=0)
+    rng = np.random.default_rng(5)
+    keys = np.round(rng.uniform(0, 100, 40), 3).astype(np.float32)
+    vals = np.arange(40, dtype=np.int32)
+    pre_drop = int(np.asarray(state.n_router_dropped))
+    pre = int(np.asarray(state.tick_idx))
+    state = dq.reinsert(q, state, keys, vals)
+    assert int(np.asarray(state.tick_idx)) - pre == 5     # ceil(40/8)
+    assert int(np.asarray(state.n_router_dropped)) == pre_drop
+    np.testing.assert_array_equal(_resident_keys(q, state), np.sort(keys))
+
+
+def test_reinsert_router_drop_raises():
+    """A drop during re-insertion means survivor quotas were under-sized
+    — reinsert must fail loudly, never silently lose drained keys."""
+    q = _tiny_dist_queue()
+    state = q.init(seed=0)
+    real = q.tick
+
+    def leaky_tick(state, ak, av, am, rm, scale=None):
+        state, res = real(state, ak, av, am, rm, scale)
+        return state._replace(
+            n_router_dropped=state.n_router_dropped + 1), res
+
+    q.tick = leaky_tick
+    keys = np.linspace(0, 10, 8, dtype=np.float32)
+    with pytest.raises(AssertionError, match="re-insertion dropped"):
+        dq.reinsert(q, state, keys, np.arange(8, dtype=np.int32))
+
+
+# -- retry-burn escalation (ElasticDistQueue under partition) --------------
+
+
+def test_retry_burn_escalates_to_declare_dead():
+    """A partition the heartbeat thresholds would never catch: the
+    bounded collective retry burns its budget, declares the device dead
+    out-of-band, re-shards, and the in-flight backlog is conserved —
+    degraded latency, never a wedge."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices; run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    base = PQConfig(a_max=64, r_max=64, seq_cap=4 * 64 + 2, n_buckets=8,
+                    bucket_cap=64, detach_min=8, detach_max=256,
+                    detach_init=8, chop_patience=64)
+    cfg = dq.make_dist_cfg(64, 2, 2, base=base, spare_devices=1)
+    sched = FaultSchedule([FaultEvent("partition", 1, 2.0, 1e6)])
+    ctl = ElasticDistQueue(dq.DistShardedQueue(cfg), schedule=sched,
+                           seed=0, suspect_after=1e7, dead_after=1e8,
+                           collective_timeout=1.5, max_retries=2)
+    w = ctl.queue.cfg.shard.a_total
+    rng = np.random.default_rng(0)
+    submitted = served = 0
+    removal_tick = None
+    for t in range(8):
+        ak = rng.uniform(0, 100, w).astype(np.float32)
+        m = rng.random(w) < 0.5
+        av = np.where(m, np.arange(w, dtype=np.int32),
+                      EMPTY_VAL).astype(np.int32)
+        ak = np.where(m, ak, np.inf).astype(np.float32)
+        before = ctl.clock.now
+        res, info = ctl.step(jnp.asarray(ak), jnp.asarray(av),
+                             jnp.asarray(m), jnp.asarray(4, jnp.int32))
+        submitted += int(m.sum())
+        served += int(np.asarray(res.rm_served).sum())
+        assert ctl.size() + served == submitted     # in-flight conserved
+        if info["removed"]:
+            assert removal_tick is None
+            removal_tick = t
+            assert info["removed"] == [1]
+            # the declare came from retry exhaustion, not the detector's
+            # silence thresholds (set astronomically high above) — and
+            # the retries burned real clock time first
+            assert ctl.clock.now - before >= 2 * 1.5
+    assert removal_tick is not None
+    assert ctl.live == [0]
+    assert 1 not in ctl.detector.alive()

@@ -1,92 +1,301 @@
-"""Serving integration: PQ scheduler ordering, elimination fast path,
-engine completes requests, per-slot decode positions."""
+"""Serving engine on the distributed queue: deadline (EDF) order, urgent
+pre-route elimination, depth admission bound, infeasibility shedding,
+bounded retry, expired accounting, and arrival-process determinism.
 
-import dataclasses
+Ports the seed-era scheduler tests (priority order, elimination
+eligibility, admission bound) onto RequestEngine / DistShardedQueue and
+adds the overload-policy coverage ISSUE 7 names.  Everything here is
+D=1 tier-1 (no forced devices); the multi-device chaos soak lives in
+tests/test_serve_soak.py behind the device gate.
+"""
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import reduced_config
-from repro.core import PQConfig
-from repro.models import transformer as tf
-from repro.serving import PQScheduler, Request, ServeEngine
+from repro.serving import (
+    AdmissionController, BurstyArrivals, DiurnalArrivals, OverloadPolicy,
+    PoissonArrivals, Request, RequestEngine, SHED_DEPTH, SHED_INFEASIBLE,
+    SHED_RETRY, build_engine, run_sla)
+from repro.serving.sla import _PATTERNS
 
 
-def test_scheduler_priority_order():
-    sched = PQScheduler()
-    reqs = [Request(rid=i, priority=float(p))
-            for i, p in enumerate([5, 1, 9, 3, 7, 2, 8, 4])]
-    sched.submit_and_acquire(reqs, 0)
-    got = sched.submit_and_acquire([], 8)
-    assert [r.priority for r in got] == sorted(r.priority for r in reqs)
+def _wave(engine, specs):
+    """Explicit wave from (rid, sla) pairs at the engine's current now."""
+    now = engine.clock.now
+    return [Request(rid=rid, arrival=now, deadline=now + sla)
+            for rid, sla in specs]
 
 
-def test_scheduler_elimination_fast_path():
-    """An urgent arrival pairs with a free slot without queue insertion
-    (the paper's add/removeMin elimination)."""
-    sched = PQScheduler()
-    bulk = [Request(rid=i, priority=100.0 + i) for i in range(16)]
-    sched.submit_and_acquire(bulk, 0)
-    base = sched.stats()
-    urgent = [Request(rid=100, priority=0.5)]
-    got = sched.submit_and_acquire(urgent, 1)
-    assert [r.rid for r in got] == [100]
-    s = sched.stats()
-    assert s["add_imm_elim"] - base["add_imm_elim"] == 1
+# -- ordering (the seed test, now against the dist queue) ------------------
 
 
-def test_scheduler_admission_control():
-    cfg = PQConfig(a_max=8, r_max=8, seq_cap=64, n_buckets=2, bucket_cap=4)
-    sched = PQScheduler(cfg)
-    with pytest.raises(ValueError):
-        for i in range(10):
-            sched.submit_and_acquire(
-                [Request(rid=i * 8 + j, priority=float(j)) for j in
-                 range(8)], 0)
-
-
-def test_engine_end_to_end():
-    cfg = dataclasses.replace(reduced_config("gemma-2b"), n_layers=2,
-                              vocab=128)
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, n_slots=4, s_max=48)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, priority=float(10 - i), max_new=4)
-            for i in range(6)]
-    eng.submit(reqs)
-
-    def prompt_fn(req):
-        return rng.integers(0, cfg.vocab, size=5).astype(np.int32)
-
-    for _ in range(20):
-        eng.step(prompt_fn)
-        if len(eng.completed) == len(reqs):
-            break
-    assert len(eng.completed) == len(reqs)
-    for rid, toks in eng.completed.items():
-        assert len(toks) == 4
-        assert all(0 <= t < cfg.vocab_padded for t in toks)
-
-
-def test_engine_respects_priority_under_contention():
-    """With 1 slot, completion order must follow priority."""
-    cfg = dataclasses.replace(reduced_config("gemma-2b"), n_layers=1,
-                              vocab=64)
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, n_slots=1, s_max=32)
-    reqs = [Request(rid=i, priority=float(p), max_new=2)
-            for i, p in enumerate([3.0, 1.0, 2.0])]
-    eng.submit(reqs)
+def test_serve_order_is_earliest_deadline_first():
+    """1 slot per tick: completion order follows the deadline, i.e. the
+    queue key really is the deadline (priority = deadline, literally)."""
+    eng = build_engine(rho=0.0, n_slots=1, seed=0)
+    slas = [50.0, 90.0, 30.0, 70.0, 40.0, 80.0, 20.0, 60.0]
+    eng.tick(wave=_wave(eng, list(enumerate(slas))))
     order = []
-    seen = set()
-    for _ in range(30):
-        eng.step(lambda r: np.array([1, 2], np.int32))
-        for rid in eng.completed:
-            if rid not in seen:
-                seen.add(rid)
-                order.append(rid)
-        if len(order) == 3:
+    while eng.depth:
+        order += eng.tick(wave=[])["served_rids"]
+    want = [i for i, _ in sorted(enumerate(slas), key=lambda t: t[1])]
+    # the first tick already served the frontier request
+    assert sorted(order + [want[0]]) == list(range(8))
+    assert order == want[1:]
+
+
+def test_urgent_dispatches_via_preroute_elimination():
+    """The elimination-eligibility assertion, ported: an urgent arrival
+    (deadline at the queue frontier) pairs against the same tick's
+    removal allocation BEFORE routing — it is served within one tick
+    and the device-side pre-route counter moves."""
+    eng = build_engine(rho=0.0, n_slots=4, seed=0, preroute="on")
+    # backlog of relaxed deadlines
+    eng.tick(wave=_wave(eng, [(i, 200.0 + i) for i in range(16)]))
+    base = int(eng.queue_stats().n_preroute_elim)
+    urgent = _wave(eng, [(100, eng.policy.tick_dt)])   # SLA-0 class
+    info = eng.tick(wave=urgent)
+    assert 100 in info["served_rids"], "urgent request must serve in 1 tick"
+    assert int(eng.queue_stats().n_preroute_elim) > base
+    # ... and it was served in time, not expired
+    assert eng.outcomes["expired"] == 0
+
+
+def test_depth_and_min_head_stats_cross_check():
+    """The new core observability fields agree with host ground truth:
+    depth == in-flight count, min_head == earliest in-flight deadline."""
+    eng = build_engine(rho=0.0, n_slots=2, seed=3)
+    eng.tick(wave=_wave(eng, [(i, 30.0 + 5 * i) for i in range(12)]))
+    s = eng.queue_stats()
+    assert int(s.depth) == eng.depth
+    assert float(s.min_head) == pytest.approx(min(eng._deadlines))
+    eng.drain()
+    s = eng.queue_stats()
+    assert int(s.depth) == eng.depth == 0
+    assert np.isinf(float(s.min_head))
+
+
+# -- overload policy -------------------------------------------------------
+
+
+def test_admission_bounds_depth_under_overload():
+    """rho = 1.5 for 500 ticks: never wedges, depth never exceeds the
+    cap, and every arrival lands in exactly one outcome class."""
+    eng = build_engine(rho=1.5, n_slots=8, seed=1, depth_cap=48)
+    rep = run_sla(eng, 500)
+    assert rep["max_depth"] <= rep["depth_cap"] == 48
+    assert rep["served"] + rep["shed"] + rep["expired"] == rep["arrivals"]
+    assert rep["shed"] > 0                      # overload MUST shed
+    assert rep["served"] > rep["arrivals"] // 2  # ... but not collapse
+    assert np.isfinite(rep["p99"])
+
+
+def test_infeasible_deadline_is_shed_explicitly():
+    """A request whose deadline cannot be met given the backlog is
+    rejected at admission with reason 'infeasible' — not queued to rot.
+
+    preroute="on": rank-0 feasibility prices same-tick dispatch, which
+    is the pre-route elimination path — adaptive gating may hold it off
+    on a cold queue and turn a frontier admit into an expiry."""
+    eng = build_engine(rho=0.0, n_slots=1, seed=0, depth_cap=64,
+                       preroute="on")
+    # 8 requests, one shared deadline 4 ticks out, 1 slot/tick: EDF can
+    # serve exactly 4 of them in time.  The other 4 must be shed at
+    # admission (rank wait > slack), each with an explicit reason —
+    # admitting them would only manufacture expiries.
+    eng.tick(wave=_wave(eng, [(i, 4.0) for i in range(8)]))
+    assert eng.admission.shed_reasons[SHED_INFEASIBLE] == 4
+    assert eng.outcomes["shed"] == 4
+    # frontier request (rank 0) stays admissible despite the backlog:
+    # EDF lets urgent work jump the queue, so a near deadline is not
+    # by itself infeasible
+    eng.tick(wave=_wave(eng, [(901, 1.0)]))
+    assert eng.admission.shed_reasons[SHED_INFEASIBLE] == 4
+    rep = run_sla(eng, 0)
+    # 901 jumping the queue displaced exactly one deadline-4 request
+    # past its deadline: EDF preemption's cost, accounted as expired
+    # (admission does not re-litigate already-admitted work)
+    assert rep["expired"] == 1
+    assert rep["served"] + rep["shed"] + rep["expired"] == rep["arrivals"]
+
+
+def test_depth_shed_retries_then_terminates():
+    """Backpressure is bounded: a depth-shed request parks, re-offers
+    after the backoff, and either admits or terminates with an explicit
+    shed — it can never circulate forever."""
+    eng = build_engine(rho=0.0, n_slots=1, seed=0, depth_cap=4,
+                       max_retries=2, sla_mean=500.0, sla_min=400.0)
+    eng.tick(wave=_wave(eng, [(i, 400.0 + i) for i in range(8)]))
+    adm = eng.admission
+    assert adm.pending == 4                      # cap 4 -> 4 parked
+    assert adm.n_retried == 4
+    assert eng.accounted() == eng.n_arrivals     # parked requests counted
+    # serve the backlog down; retries re-offer and admit
+    rep = run_sla(eng, 0)
+    assert rep["retry_pending"] == 0
+    assert rep["served"] + rep["shed"] + rep["expired"] == 8
+
+
+def test_retry_budget_exhaustion_sheds_terminally():
+    """Hold depth at the cap long enough that a parked request burns its
+    whole retry budget: it must end as a 'retry' shed, never silent."""
+    eng = build_engine(rho=0.0, n_slots=1, seed=0, depth_cap=2,
+                       max_retries=1, sla_mean=500.0, sla_min=400.0)
+    # 3 arrivals, cap 2: one parks.  Keep the cap saturated by feeding a
+    # fresh earlier-deadline arrival whenever a slot frees.
+    eng.tick(wave=_wave(eng, [(0, 400.0), (1, 401.0), (2, 402.0)]))
+    assert eng.admission.pending == 1
+    for t in range(6):
+        eng.tick(wave=_wave(eng, [(10 + t, 300.0)]))
+        if eng.admission.shed_reasons[SHED_RETRY]:
             break
-    assert order == [1, 2, 0], order  # priority 1.0 < 2.0 < 3.0
+    assert eng.admission.shed_reasons[SHED_RETRY] >= 1
+    rep = run_sla(eng, 0)
+    assert rep["served"] + rep["shed"] + rep["expired"] == rep["arrivals"]
+
+
+def test_zero_retry_policy_sheds_depth_class_directly():
+    eng = build_engine(rho=0.0, n_slots=1, seed=0, depth_cap=2,
+                       max_retries=0, sla_mean=500.0, sla_min=400.0)
+    eng.tick(wave=_wave(eng, [(i, 400.0 + i) for i in range(4)]))
+    assert eng.admission.shed_reasons[SHED_DEPTH] == 2
+    assert eng.admission.pending == 0
+
+
+def test_optimistic_slack_admits_late_requests_as_expired():
+    """slack < 1 under-estimates wait, so hopeless requests get admitted
+    and then EXPIRE at dispatch — the third outcome class, accounted,
+    never billed as a serve."""
+    eng = build_engine(rho=0.0, n_slots=1, seed=0, slack=0.05)
+    # 40 deadline-30 requests at 1/tick: the last 10 can't make it, but
+    # slack 0.05 prices 40 ticks of wait as 2 — all 40 admit
+    eng.tick(wave=_wave(eng, [(i, 30.0) for i in range(40)]))
+    assert eng.n_admitted == 40          # nothing shed at admission
+    rep = run_sla(eng, 0)
+    assert rep["expired"] == 10
+    assert rep["served"] + rep["shed"] + rep["expired"] == 40
+    # expired requests contribute no latency sample
+    assert len(eng.latencies) == rep["served"]
+
+
+def test_degraded_capacity_scale_tightens_feasibility():
+    """The lane_scale coupling: the same request at the same depth is
+    feasible on a healthy mesh and shed on a throttled one."""
+    pol = OverloadPolicy(depth_cap=64, serve_rate=8.0)
+    adm = AdmissionController(pol)
+    # 16 deadlines ahead of the probe, 24 behind -> rank 16
+    inflight = np.asarray([2.0] * 16 + [100.0] * 24, np.float64)
+    req = [Request(rid=1, arrival=0.0, deadline=3.0)]
+    ok, _ = adm.admit(req, inflight, 40, now=0.0, max_admit=64)
+    assert len(ok) == 1                  # ceil(17/8) = 3 ticks <= 3
+    adm.set_capacity_scale(0.25)         # degraded mesh: rate 8 -> 2
+    req2 = [Request(rid=2, arrival=0.0, deadline=3.0)]
+    ok, shed = adm.admit(req2, inflight, 40, now=0.0, max_admit=64)
+    assert not ok                        # ceil(17/2) = 9 ticks > 3
+    assert shed[0].reason == SHED_INFEASIBLE
+
+
+# -- arrival processes -----------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", sorted(_PATTERNS))
+def test_arrivals_deterministic_and_clock_stamped(pattern):
+    cls = _PATTERNS[pattern]
+
+    def stream(seed):
+        p = cls(5.0, seed=seed)
+        out = []
+        for _ in range(50):
+            out += [(r.rid, r.arrival, r.deadline) for r in p.wave()]
+            p.clock.advance(1.0)
+        return out
+
+    a, b = stream(7), stream(7)
+    assert a == b, "same seed must replay the same stream"
+    assert stream(8) != a
+    arrivals = [t[1] for t in a]
+    assert arrivals == sorted(arrivals)
+    assert all(d > t for _, t, d in a)
+
+
+def test_poisson_rate_and_sla_floor():
+    p = PoissonArrivals(8.0, seed=0, sla_mean=50.0, sla_min=20.0)
+    reqs = []
+    for _ in range(500):
+        reqs += p.wave()
+        p.clock.advance(1.0)
+    assert len(reqs) / 500 == pytest.approx(8.0, rel=0.1)
+    slas = [r.sla for r in reqs]
+    assert min(slas) >= 20.0
+    assert np.mean(slas) > 30.0
+
+
+def test_bursty_exceeds_base_rate():
+    base = PoissonArrivals(6.0, seed=1)
+    burst = BurstyArrivals(6.0, seed=1, burst_factor=4.0,
+                           mean_on=5.0, mean_off=20.0)
+    n_base = n_burst = 0
+    for _ in range(400):
+        n_base += len(base.wave())
+        n_burst += len(burst.wave())
+        base.clock.advance(1.0)
+        burst.clock.advance(1.0)
+    assert n_burst > n_base * 1.2, "bursts must be EXTRA traffic"
+
+
+def test_diurnal_rate_modulates():
+    p = DiurnalArrivals(10.0, period=100.0, amplitude=0.8, seed=2)
+    assert p._rate_now(25.0) == pytest.approx(18.0)   # peak
+    assert p._rate_now(75.0) == pytest.approx(2.0)    # trough
+    counts = []
+    for _ in range(200):
+        counts.append(len(p.wave()))
+        p.clock.advance(1.0)
+    peak = sum(counts[0:50]); trough = sum(counts[50:100])
+    assert peak > 2 * max(trough, 1)
+
+
+def test_urgent_fraction_gets_one_tick_sla():
+    p = PoissonArrivals(20.0, seed=3, p_urgent=0.3, tick_dt=1.0)
+    reqs = []
+    for _ in range(100):
+        reqs += p.wave()
+        p.clock.advance(1.0)
+    frac = np.mean([r.sla == 1.0 for r in reqs])
+    assert 0.2 < frac < 0.4
+
+
+# -- wiring guards ---------------------------------------------------------
+
+
+def test_engine_rejects_split_timelines():
+    eng = build_engine(rho=0.5, seed=0)
+    foreign = PoissonArrivals(1.0, seed=0)   # its own SimClock
+    with pytest.raises(ValueError, match="injected clock"):
+        RequestEngine(eng.queue, eng.policy, arrivals=foreign)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        OverloadPolicy(depth_cap=0, serve_rate=1.0)
+    with pytest.raises(ValueError):
+        OverloadPolicy(depth_cap=8, serve_rate=0.0)
+    with pytest.raises(ValueError):
+        OverloadPolicy(depth_cap=8, serve_rate=1.0, max_retries=-1)
+    with pytest.raises(ValueError):
+        PoissonArrivals(-1.0)
+    with pytest.raises(ValueError):
+        BurstyArrivals(1.0, burst_factor=0.5)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(1.0, amplitude=2.0)
+
+
+def test_sla_run_bursty_partition_exact():
+    """End-to-end harness under bursty overload: the partition is exact
+    after drain + flush (the conservation contract of DESIGN.md §8)."""
+    eng = build_engine(rho=1.0, n_slots=8, seed=5, pattern="bursty",
+                       burst_factor=4.0, depth_cap=48)
+    rep = run_sla(eng, 200)
+    assert rep["served"] + rep["shed"] + rep["expired"] == rep["arrivals"]
+    assert rep["in_flight"] == 0 and rep["retry_pending"] == 0
+    assert rep["max_depth"] <= 48

@@ -1,5 +1,6 @@
 """End-to-end behaviour: train -> checkpoint -> restore -> serve, with the
-paper's priority queue scheduling the serving side."""
+paper's priority queue scheduling the serving side (the RequestEngine on
+the distributed queue; the seed-era slot-decode ServeEngine is gone)."""
 
 import dataclasses
 import tempfile
@@ -12,7 +13,7 @@ from repro.ckpt import CheckpointManager
 from repro.configs import reduced_config
 from repro.data import SyntheticLM
 from repro.launch.train import TrainConfig, init_train_state, make_train_step
-from repro.serving import Request, ServeEngine
+from repro.serving import build_engine, run_sla
 
 
 def test_train_checkpoint_serve_roundtrip():
@@ -36,19 +37,17 @@ def test_train_checkpoint_serve_roundtrip():
         mgr.save(6, state.params)
         restored, got_step = mgr.restore(state.params)
         assert got_step == 6
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
-    # --- serve with the PQ scheduler ---
-    eng = ServeEngine(cfg, restored, n_slots=2, s_max=48)
-    eng.submit([Request(rid=0, priority=1.0, max_new=3),
-                Request(rid=1, priority=2.0, max_new=3),
-                Request(rid=2, priority=0.5, max_new=3)])
-    rng = np.random.default_rng(0)
-    for _ in range(20):
-        eng.step(lambda r: rng.integers(0, cfg.vocab, 4).astype(np.int32))
-        if len(eng.completed) == 3:
-            break
-    assert len(eng.completed) == 3
-    # elimination/combining actually happened in the scheduler
-    s = eng.sched.stats()
-    assert s["n_ticks"] > 0
-    assert s["rm_seq"] + s["add_imm_elim"] + s["add_upc_elim"] > 0
+    # --- serve with the PQ request engine (deadline = priority) ---
+    eng = build_engine(rho=0.8, n_slots=4, seed=0, p_urgent=0.1,
+                       preroute="on")
+    rep = run_sla(eng, 60)
+    assert rep["served"] > 0
+    assert rep["served"] + rep["shed"] + rep["expired"] == rep["arrivals"]
+    # elimination/combining actually happened inside the device ticks
+    s = eng.queue_stats()
+    assert int(s.n_ticks) > 0
+    assert int(s.n_preroute_elim) + int(s.lane.add_imm_elim) > 0
