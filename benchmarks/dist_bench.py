@@ -64,13 +64,20 @@ def bench_dist_mix(p_add: float, key_dist: str, preroute: str, lane_scale=None) 
 
     ``lane_scale`` is the degraded-mode grant throttle ([L] f32 fed to
     every tick); None is the healthy unthrottled queue."""
-    from repro.core import distributed as dq
+    from repro.core.factory import EngineSpec, make_engine
 
     base = pq_bench.make_cfg(WIDTH)
-    cfg = dq.make_dist_cfg(
-        WIDTH, N_DEVICES, LANES_PER_DEVICE, base=base, preroute=preroute
+    q = make_engine(
+        EngineSpec(
+            engine="dist",
+            width=WIDTH,
+            base=base,
+            lanes=N_DEVICES * LANES_PER_DEVICE,
+            n_devices=N_DEVICES,
+            lanes_per_device=LANES_PER_DEVICE,
+            preroute=preroute,
+        )
     )
-    q = dq.DistShardedQueue(cfg)
     rng = np.random.default_rng(0)
 
     # warm with the paper's 2000 elements (mirrors pq_bench._warm)

@@ -6,30 +6,37 @@ ops/s.  The batch-world analogue maps *thread count* to *op-batch width*
 per tick: a width-W tick carries the work W threads would submit
 concurrently.
 
-All three queues (pqe = the paper's design, fc = flat-combining analogue,
-par = lock-free-skiplist analogue) share the tick API, so one driver
-measures all of them.
+Every implementation is resolved through the unified factory
+(repro.core.factory) and driven through the QueueEngine protocol, so one
+driver measures all of them — including the adaptive workload controller
+(impl="adaptive"), which picks its own engine per regime.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import FCPQ, ParallelPQ, PQConfig, init, tick
-from repro.core import pqueue
-from repro.core import sharded as shq
-from repro.core.config import EMPTY_VAL
+from repro.core import PQConfig
+from repro.core.factory import EngineSpec, make_engine
 
 WARM_ELEMENTS = 2000     # paper: "inserting 2000 elements ... stable state"
 KEY_HI = 100_000.0
 
 #: lane count for the "sharded" impl when the caller does not pick one
 DEFAULT_LANES = 4
+
+#: impl names the full-figure benches sweep (run.py figs 5-6 iterate this)
+IMPLS = ("pqe", "fcskiplist", "lfskiplist", "sharded")
+
+#: engine kinds with a lax.scan tick_n driver (one dispatch per measured
+#: run; amortizes per-tick dispatch, a measurable slice at ms-scale ticks)
+SCAN_KINDS = ("pqe", "sharded", "adaptive")
 
 
 def make_cfg(width: int) -> PQConfig:
@@ -41,33 +48,24 @@ def make_cfg(width: int) -> PQConfig:
         halve_threshold=1000, double_threshold=100)
 
 
-IMPLS = {
-    "pqe": (init, tick),
-    "fcskiplist": (FCPQ.init, FCPQ.tick),
-    "lfskiplist": (ParallelPQ.init, ParallelPQ.tick),
-    "sharded": (shq.init, shq.tick),
-}
+def make_impl_engine(impl: str, width: int, *, lanes: int = DEFAULT_LANES,
+                     preroute: str = "adaptive", min_lanes: int = None,
+                     window: int = None):
+    """Resolve one bench impl to its engine via the unified factory.
 
-#: lax.scan multi-tick drivers (one dispatch per measured run; amortizes
-#: per-tick dispatch, which at ms-scale ticks is a measurable slice)
-TICK_N = {
-    "pqe": pqueue.tick_n,
-    "sharded": shq.tick_n,
-}
-
-
-def make_impl_cfg(impl: str, width: int, *, lanes: int = DEFAULT_LANES,
-                  preroute: str = "adaptive"):
-    """Per-impl config: the sharded queue wraps the width-`width` base
-    config into `lanes` vmapped lanes (MultiQueues axis).  `preroute`
-    selects the sharded queue's pre-route elimination gate
-    (adaptive|on|off) — the bench grid measures "off" as the disabled
-    comparison point."""
-    base = make_cfg(width)
-    if impl == "sharded":
-        return shq.make_sharded_cfg(width, lanes, base=base,
-                                    preroute=preroute)
-    return base
+    `lanes`/`preroute`/`min_lanes` only affect the lane-based engines
+    (sharded / adaptive); `preroute` selects the sharded queue's
+    pre-route elimination gate (adaptive|on|off) — the bench grid
+    measures "off" as the disabled comparison point.  `window` sets the
+    adaptive controller's decision cadence in ticks (its deployment
+    knob: decisions per window cost one host round-trip)."""
+    controller = None
+    if window is not None:
+        from repro.core.adaptive import ControllerConfig
+        controller = ControllerConfig(window=window)
+    return make_engine(EngineSpec(
+        engine=impl, width=width, base=make_cfg(width), lanes=lanes,
+        min_lanes=min_lanes, preroute=preroute, controller=controller))
 
 
 def gen_mix_batches(width: int, n_add: int, n_rm: int, ticks: int, rng,
@@ -100,25 +98,33 @@ def gen_mix_batches(width: int, n_add: int, n_rm: int, ticks: int, rng,
     return batches
 
 
-def _warm(cfg, impl_init, impl_tick, rng):
-    state = impl_init(cfg)
+def _warm(eng, rng):
+    state = eng.init(seed=0)
+    w = eng.width
     keys = rng.uniform(0, KEY_HI, WARM_ELEMENTS).astype(np.float32)
-    for i in range(0, WARM_ELEMENTS, cfg.a_max):
-        chunk = keys[i:i + cfg.a_max]
-        ak = np.full((cfg.a_max,), np.inf, np.float32)
-        av = np.zeros((cfg.a_max,), np.int32)
-        mask = np.zeros((cfg.a_max,), bool)
+    for i in range(0, WARM_ELEMENTS, w):
+        chunk = keys[i:i + w]
+        ak = np.full((w,), np.inf, np.float32)
+        av = np.zeros((w,), np.int32)
+        mask = np.zeros((w,), bool)
         ak[:len(chunk)] = chunk
         mask[:len(chunk)] = True
-        state, _ = impl_tick(cfg, state, jnp.asarray(ak), jnp.asarray(av),
-                             jnp.asarray(mask), jnp.asarray(0))
+        state, _ = eng.tick(state, jnp.asarray(ak), jnp.asarray(av),
+                            jnp.asarray(mask), jnp.asarray(0))
     return state
+
+
+def _stack(batches):
+    return (jnp.stack([b[0] for b in batches]),
+            jnp.stack([b[1] for b in batches]),
+            jnp.stack([b[2] for b in batches]))
 
 
 def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
               seed: int = 0, key_dist: str = "uniform",
               lanes: int = DEFAULT_LANES, preroute: str = "adaptive",
-              scan: bool = True) -> Dict[str, float]:
+              min_lanes: int = None, settle: int = 0,
+              window: int = None, scan: bool = True) -> Dict[str, float]:
     """Throughput of one implementation at one width and add-fraction.
 
     key_dist:
@@ -128,45 +134,71 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
         cluster just above the current minimum, the paper's motivating
         scheduler workload, where elimination thrives.
 
-    `lanes`/`preroute` only affect impl="sharded" (relaxed semantics:
-    its removes are near-minimal, not exact — see repro.core.sharded).
-    `scan=True` drives impls that provide a `tick_n` scan driver
-    (TICK_N) with one dispatch for the whole run; others fall back to
-    the eager loop.
+    `settle` prepends that many UNTIMED ticks of the same mix stream
+    (one continuous generator draw, so the DES frontier keeps drifting):
+    the adaptive controller's measurement window — it must latch its
+    regime before the clock starts, exactly as a long-running queue
+    would have.  `scan=True` drives engines with a scan tick_n
+    (SCAN_KINDS) in one dispatch; others fall back to the eager loop.
 
     Returns {us_per_tick, mops_per_s, ...stats}.
     """
-    cfg = make_impl_cfg(impl, width, lanes=lanes, preroute=preroute)
-    impl_init, impl_tick = IMPLS[impl]
+    eng = make_impl_engine(impl, width, lanes=lanes, preroute=preroute,
+                           min_lanes=min_lanes, window=window)
     rng = np.random.default_rng(seed)
-    state = _warm(cfg, impl_init, impl_tick, rng)
+    state = _warm(eng, rng)
+
+    if eng.kind == "adaptive" and settle:
+        # re-phase the decision windows to the measured stream (warm
+        # ticks must not shift a window boundary into the timed region),
+        # then snap settle so the TIMED run starts window-aligned: the
+        # timed ticks execute as whole decision windows, no
+        # partial-chunk dispatches inside the clock.  With settle a
+        # multiple of the window the snap is a no-op, so the adaptive
+        # engine consumes the SAME settle+timed stream ticks as the
+        # fixed impls it is gated against.
+        state = dataclasses.replace(state, tick_count=0)
+        settle += -settle % eng.ctl_cfg.window
 
     n_add = int(round(width * p_add))
     n_rm = width - n_add
-    batches = gen_mix_batches(cfg.a_max, n_add, n_rm, ticks, rng, key_dist)
+    batches = gen_mix_batches(eng.width, n_add, n_rm, settle + ticks, rng,
+                              key_dist)
+    settle_b, timed_b = batches[:settle], batches[settle:]
     rmc = jnp.asarray(n_rm, jnp.int32)
 
+    use_scan = scan and eng.kind in SCAN_KINDS
+    if settle_b:
+        if use_scan:
+            sk, sv, sm = _stack(settle_b)
+            state, _ = eng.tick_n(state, sk, sv, sm,
+                                  jnp.full((settle,), n_rm, jnp.int32))
+        else:
+            for b in settle_b:
+                state, _ = eng.tick(state, *b, rmc)
+        jax.block_until_ready(state)
+
     # the donating ticks consume their state argument: warm up / compile
-    # on a throwaway copy so the measured run starts from the warm state
+    # on a throwaway copy so the measured run starts from the warm state.
+    # For the adaptive engine the spare run replays the EXACT decision
+    # sequence the timed run will take (same stream, same controller
+    # state), so every kernel and switch path it needs is compiled.
     spare = jax.tree.map(jnp.copy, state)
-    tn = TICK_N.get(impl) if scan else None
-    if tn is not None:
-        stak = jnp.stack([b[0] for b in batches])
-        stav = jnp.stack([b[1] for b in batches])
-        stam = jnp.stack([b[2] for b in batches])
+    if use_scan:
+        stak, stav, stam = _stack(timed_b)
         rms = jnp.full((ticks,), n_rm, jnp.int32)
-        s2, _ = tn(cfg, spare, stak, stav, stam, rms)
+        s2, _ = eng.tick_n(spare, stak, stav, stam, rms)
         jax.block_until_ready(s2)
         t0 = time.perf_counter()
-        state, res = tn(cfg, state, stak, stav, stam, rms)
+        state, res = eng.tick_n(state, stak, stav, stam, rms)
         jax.block_until_ready(state)
         dt = time.perf_counter() - t0
     else:
-        s2, _ = impl_tick(cfg, spare, *batches[0], rmc)
+        s2, _ = eng.tick(spare, *timed_b[0], rmc)
         jax.block_until_ready(s2)
         t0 = time.perf_counter()
         for t in range(ticks):
-            state, res = impl_tick(cfg, state, *batches[t], rmc)
+            state, res = eng.tick(state, *timed_b[t], rmc)
         jax.block_until_ready(state)
         dt = time.perf_counter() - t0
 
@@ -174,23 +206,31 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
         "us_per_tick": dt / ticks * 1e6,
         "mops_per_s": width * ticks / dt / 1e6,
     }
-    if impl == "pqe":
-        s = state.stats
+    kind = eng.kind
+    if kind == "adaptive":
+        for k, v in eng.controller_stats(state).items():
+            if isinstance(v, (int, float)):
+                out[f"ctl_{k}"] = v
+        out["ctl_engine_is_pqe"] = int(state.kind == "pqe")
+        kind = state.kind          # inner stats of whatever it landed on
+        s = eng.stats(state)
+    else:
+        s = eng.stats(state)
+    if kind == "pqe":
         for k in ("add_imm_elim", "add_upc_elim", "add_seq", "add_par",
                   "rm_seq", "rm_par", "rm_empty", "n_movehead",
                   "n_chophead", "n_removes"):
             out[k] = int(getattr(s, k))
-    elif impl == "sharded":
-        st = shq.stats(state)
-        out["preroute_elim"] = int(st.n_preroute_elim)
-        out["preroute_ticks"] = int(st.n_preroute_ticks)
-        out["preroute_hit_per_tick"] = (int(st.n_preroute_elim)
-                                        / max(int(st.n_ticks), 1))
-        out["elim_ema"] = float(st.elim_ema)
-        out["balance_ema"] = float(st.balance_ema)
-        out["lane_add_elim"] = int(st.lane.add_imm_elim
-                                   + st.lane.add_upc_elim)
-        out["lane_rm_served"] = int(st.lane.rm_seq + st.lane.rm_par)
+    elif kind == "sharded":
+        out["preroute_elim"] = int(s.n_preroute_elim)
+        out["preroute_ticks"] = int(s.n_preroute_ticks)
+        out["preroute_hit_per_tick"] = (int(s.n_preroute_elim)
+                                        / max(int(s.n_ticks), 1))
+        out["elim_ema"] = float(s.elim_ema)
+        out["balance_ema"] = float(s.balance_ema)
+        out["lane_add_elim"] = int(s.lane.add_imm_elim
+                                   + s.lane.add_upc_elim)
+        out["lane_rm_served"] = int(s.lane.rm_seq + s.lane.rm_par)
     return out
 
 

@@ -291,10 +291,12 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
       at w4096, {2,8} at w256); kept verbatim so the PR-over-PR
       trajectory stays diffable back to the seed;
     * the workload GRID at w4096 — p_add ∈ {0.3, 0.5, 0.7} ×
-      key_dist ∈ {des, uniform} for `pqe`, `sharded_L8`, and
-      `sharded_L8_noelim` (pre-route elimination forced off), so the
-      balanced-mix elimination win — the paper's headline — is a
-      measured, regression-gated number instead of a claim;
+      key_dist ∈ {des, uniform} for `pqe`, `sharded_L8`,
+      `sharded_L8_noelim` (pre-route elimination forced off), and
+      `sharded_L8_adaptive` (the workload controller picking its own
+      engine), so the balanced-mix elimination win — the paper's
+      headline — AND the controller's regime-tracking are measured,
+      regression-gated numbers instead of claims;
     * the MULTI-DEVICE cells (`*_dist`, benchmarks/dist_bench.py in a
       subprocess with 8 forced host devices) — `dist_sharded_D8` (the
       lanes-over-devices DistShardedQueue, D=8 × l=1), its
@@ -343,21 +345,41 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         for name, us in cell.items():
             _emit(f"smoke_{name}_w{width}", us, "us_per_tick")
 
+    # column name -> (factory impl, bench_mix kwargs).  EVERY variant
+    # settles 40 untimed ticks of the same stream so all columns enter
+    # the clock with the same absorbed workload (at net-filling mixes a
+    # settle-less impl would be measured on a much smaller queue —
+    # apples to oranges).  For the adaptive column (the workload
+    # controller, repro.core.adaptive) the settle is also its
+    # measurement window: two decision windows (window=20, confirm=2)
+    # to latch the cell's regime before the clock starts, exactly as a
+    # long-running queue would have (the per-cell gate then holds it to
+    # <=1.05x the cell's best FIXED engine; check_bench_regression.py).
     grid_variants = (
-        ("pqe", dict()),
-        ("sharded_L8", dict(lanes=8, preroute="adaptive")),
-        ("sharded_L8_noelim", dict(lanes=8, preroute="off")),
+        ("pqe", "pqe", dict(settle=40)),
+        ("sharded_L8", "sharded", dict(lanes=8, preroute="adaptive", settle=40)),
+        ("sharded_L8_noelim", "sharded", dict(lanes=8, preroute="off", settle=40)),
+        ("sharded_L8_adaptive", "adaptive",
+         dict(lanes=8, preroute="adaptive", settle=40, window=20)),
     )
     hit_rates = {}
     for p_add, key_dist in SMOKE_GRID:
-        cell = {}
         cname = _grid_cell_name(SMOKE_GRID_WIDTH, p_add, key_dist)
-        for name, kw in grid_variants:
-            impl = "sharded" if name.startswith("sharded") else name
-            runs = [bench_mix(impl, SMOKE_GRID_WIDTH, p_add, ticks=20,
-                              key_dist=key_dist, **kw)
-                    for _ in range(3)]
-            best = min(runs, key=lambda r: r["us_per_tick"])
+        # reps are INTERLEAVED across variants (rep-major, not
+        # variant-major): the adaptive column is gated ABSOLUTELY
+        # against the others in this cell, so every column must sample
+        # the same ambient-noise windows — a variant-major loop runs
+        # each column in a different thermal/load period and the
+        # min-of-reps comparison inherits that drift
+        runs = {name: [] for name, _, _ in grid_variants}
+        for _ in range(4):
+            for name, impl, kw in grid_variants:
+                runs[name].append(bench_mix(impl, SMOKE_GRID_WIDTH, p_add,
+                                            ticks=20, key_dist=key_dist,
+                                            **kw))
+        cell = {}
+        for name, _, _ in grid_variants:
+            best = min(runs[name], key=lambda r: r["us_per_tick"])
             cell[name] = round(best["us_per_tick"], 2)
             if name == "sharded_L8":
                 # hit rate from the SAME run the recorded time came from
@@ -391,7 +413,8 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
             "grid": {"width": SMOKE_GRID_WIDTH,
                      "p_add": [0.3, 0.5, 0.7],
                      "key_dist": ["des", "uniform"],
-                     "impls": [n for n, _ in grid_variants]},
+                     "impls": [n for n, _, _ in grid_variants],
+                     "adaptive_settle_ticks": 24},
             # straight from the dist bench's own payload — the cell
             # definition has one source of truth (dist_bench.CELLS)
             "dist_cells": dist["meta"],

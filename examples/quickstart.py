@@ -3,20 +3,27 @@
 Runs on a single CPU device; ~10 seconds.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Engines are built through the unified factory (repro.core.factory): one
+``EngineSpec`` names the engine kind — ``pqe`` (the paper's combined
+queue, used here), ``sharded`` (L relaxed lanes), ``dist`` / ``elastic``
+(device mesh, fault tolerance), or ``adaptive`` (a workload controller
+that picks between them at runtime).
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import EMPTY_VAL, PQConfig, init, tick
+from repro.core import EngineSpec, PQConfig, make_engine
 
 
 def main() -> None:
     # a small queue: 64-op ticks, a 512-slot sequential head, 16 buckets
-    cfg = PQConfig(a_max=64, r_max=64, seq_cap=512, n_buckets=16,
-                   bucket_cap=64, detach_min=8, detach_max=256,
-                   detach_init=32)
-    state = init(cfg)
+    base = PQConfig(a_max=64, r_max=64, seq_cap=512, n_buckets=16,
+                    bucket_cap=64, detach_min=8, detach_max=256,
+                    detach_init=32)
+    eng = make_engine(EngineSpec(engine="pqe", width=64, base=base))
+    state = eng.init(seed=0)
     rng = np.random.default_rng(0)
 
     print("== insert three batches of 64 random keys ==")
@@ -25,8 +32,8 @@ def main() -> None:
         ak = jnp.asarray(keys)
         av = jnp.arange(64, dtype=jnp.int32) + b * 64
         mask = jnp.ones((64,), bool)
-        state, _ = tick(cfg, state, ak, av, mask, jnp.asarray(0))
-    print(f"queue size: {int(state.seq_len) + int(state.par_count)}"
+        state, _ = eng.tick(state, ak, av, mask, jnp.asarray(0))
+    print(f"queue size: {int(eng.size(state))}"
           f"  min={float(state.min_value):.2f}"
           f"  lastSeq={float(state.last_seq):.2f}"
           f"  detach_n={int(state.detach_n)}")
@@ -37,12 +44,12 @@ def main() -> None:
         jnp.asarray(keys))
     av = jnp.arange(64, dtype=jnp.int32) + 1000
     mask = jnp.zeros((64,), bool).at[:32].set(True)
-    state, res = tick(cfg, state, ak, av, mask, jnp.asarray(32))
+    state, res = eng.tick(state, ak, av, mask, jnp.asarray(32))
     served = np.asarray(res.rm_keys)[np.asarray(res.rm_served)]
     print(f"removed the {len(served)} smallest keys: "
           f"{np.sort(served)[:8].round(1)} ...")
 
-    s = state.stats
+    s = eng.stats(state)
     print("\n== per-path breakdown (the paper's Figs. 7-8) ==")
     print(f" adds eliminated immediately : {int(s.add_imm_elim)}")
     print(f" adds eliminated after aging : {int(s.add_upc_elim)}")

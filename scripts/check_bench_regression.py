@@ -35,6 +35,15 @@ the gate passes); the gate exists to catch perf-relevant changes
 shipped WITHOUT re-baselining.  An impl present only in one file is
 reported but not gated (lets the sweep grow lanes/variants).
 
+The ``sharded_L8_adaptive`` columns additionally gate on an ABSOLUTE
+within-cell contract (the adaptive controller's acceptance bar): in
+every FRESH grid cell that has the adaptive impl, its us_per_tick must
+stay within --adaptive-tol (default 5%) of the best fixed impl in that
+same cell.  Both numbers come from the same run on the same machine, so
+no normalization applies — and unlike the drift gate this one cannot be
+re-baselined away: an adaptive controller that stops tracking the
+per-regime winner fails CI no matter what BENCH_pq.json says.
+
 A markdown perf table is appended to --summary when given, or to
 $GITHUB_STEP_SUMMARY when set — so the per-cell trajectory is readable
 straight from the Actions run page.
@@ -94,6 +103,10 @@ def main() -> int:
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed relative growth of an impl's "
                          "machine-normalized us_per_tick")
+    ap.add_argument("--adaptive-tol", type=float, default=0.05,
+                    help="allowed overhead of sharded_L8_adaptive over "
+                         "the best fixed impl within each fresh grid "
+                         "cell (absolute, same-machine)")
     ap.add_argument("--summary", default=None,
                     help="append a markdown perf table to this path "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
@@ -151,6 +164,30 @@ def main() -> int:
             rows.append((cell_name, impl, bcell.get(impl),
                          fcell.get(impl), None, f"only in {where}"))
 
+    # absolute within-cell gate: the adaptive impl must track the best
+    # fixed impl of every fresh grid cell (same machine, same run — no
+    # normalization, no re-baselining escape hatch)
+    ADAPTIVE = "sharded_L8_adaptive"
+    adaptive_failures = []
+    for cell_name in sorted(fresh):
+        fcell = fresh[cell_name]
+        if cell_name.startswith("serve_") or ADAPTIVE not in fcell:
+            continue
+        fixed = {k: v for k, v in fcell.items()
+                 if k != ADAPTIVE and isinstance(v, (int, float))}
+        if not fixed:
+            continue
+        best_impl = min(fixed, key=fixed.get)
+        ratio = max(fcell[ADAPTIVE], 1e-6) / max(fixed[best_impl], 1e-6)
+        flag = "REGRESSION" if ratio > 1 + args.adaptive_tol else "ok"
+        print(f"{cell_name}/{ADAPTIVE}: {fcell[ADAPTIVE]:.1f}us vs best "
+              f"fixed {best_impl}={fixed[best_impl]:.1f}us "
+              f"(x{ratio:.2f}, cap {1 + args.adaptive_tol:.2f}) {flag}")
+        rows.append((cell_name, f"{ADAPTIVE} vs {best_impl}",
+                     fixed[best_impl], fcell[ADAPTIVE], ratio, flag))
+        if ratio > 1 + args.adaptive_tol:
+            adaptive_failures.append((cell_name, best_impl, ratio))
+
     summary_path = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
     if summary_path and rows:
         with open(summary_path, "a") as f:
@@ -171,6 +208,14 @@ def main() -> int:
               "  PYTHONPATH=src:. python benchmarks/run.py --smoke "
               "--merge-min BENCH_pq.json\n"
               "and commit the fresh BENCH_pq.json.")
+        return 1
+    if adaptive_failures:
+        print(f"\nFAIL: {ADAPTIVE} exceeds the best fixed impl by more "
+              f"than {args.adaptive_tol:.0%} in {len(adaptive_failures)} "
+              "cell(s) — the controller is not tracking the per-regime "
+              "winner (re-baselining does NOT clear this gate):")
+        for cell, best_impl, ratio in adaptive_failures:
+            print(f"  {cell}: x{ratio:.2f} vs {best_impl}")
         return 1
     print("\nOK: no impl regressed beyond tolerance")
     return 0

@@ -15,9 +15,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import distributed as dq
 from repro.core import sharded as shq
 from repro.core.config import PQConfig
+from repro.core.factory import EngineSpec, make_engine
 
 
 def main():
@@ -27,8 +27,10 @@ def main():
     base = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16,
                     bucket_cap=32, detach_min=4, detach_max=64,
                     detach_init=8, chop_patience=8)
-    q = dq.DistShardedQueue(dq.make_dist_cfg(W, 8, 2, base=base))
-    scfg = shq.make_sharded_cfg(W, 16, base=base)
+    q = make_engine(EngineSpec(engine="dist", width=W, base=base, lanes=16,
+                               n_devices=8, lanes_per_device=2))
+    scfg = make_engine(EngineSpec(engine="sharded", width=W, base=base,
+                                  lanes=16)).cfg
     assert scfg == q.cfg.shard
     dstate = q.init(seed=1)
     sstate = shq.init(scfg, seed=1)

@@ -13,6 +13,14 @@ Public API:
                                           lanes placed across a device
                                           mesh via shard_map (lanes-over-
                                           devices; repro.core.distributed)
+    EngineSpec, make_engine, QueueEngine — the unified factory: every
+                                          engine kind (pqe | sharded |
+                                          dist | elastic | adaptive | the
+                                          baselines) behind one spec
+                                          (repro.core.factory)
+    ControllerConfig, AdaptiveEngine    — the workload controller that
+                                          picks the engine at runtime
+                                          (repro.core.adaptive)
 """
 
 from repro.core.config import EMPTY_VAL, PQConfig, PRODUCTION, SMALL
@@ -20,7 +28,9 @@ from repro.core.pqueue import (PQState, PQStats, TickResult, add_batch, init,
                                peek_min, remove_batch, size, tick)
 from repro.core.baselines import FCPQ, ParallelPQ, merge_sorted
 from repro.core.elimination import ElimResult, eliminate_batch
-from repro.core.adaptive import update_detach
+from repro.core.adaptive import (AdaptiveEngine, ControllerConfig,
+                                 update_detach)
+from repro.core.factory import EngineSpec, QueueEngine, make_engine
 from repro.core.ref_pq import RefPQ
 
 __all__ = [
@@ -29,4 +39,6 @@ __all__ = [
     "remove_batch", "size", "tick",
     "FCPQ", "ParallelPQ", "merge_sorted",
     "ElimResult", "eliminate_batch", "update_detach", "RefPQ",
+    "AdaptiveEngine", "ControllerConfig",
+    "EngineSpec", "QueueEngine", "make_engine",
 ]

@@ -1,24 +1,763 @@
-"""The paper's adaptive moveHead policy (§2.1), as a pure function.
+"""Adaptive policies: the paper's moveHead sizing (§2.1) and the
+workload controller that picks the ENGINE (§3 scaled up).
 
-"The number of elements that SL::moveHead() tries to detach to the
-sequential part adaptively varies between 8 and 65,536. Our policy is
-simple: if more than N insertions (e.g. N = 1000) occurred in the
-sequential part since the last SL::moveHead(), we halve the number of
-elements moved; otherwise, if less than M insertions (e.g. M = 100) were
-made, we double this number."
+The paper's headline claim is that the winning structure is
+workload-dependent: elimination + combining dominates when add() and
+removeMin() arrive balanced with keys clustering near the minimum, a
+single combined queue dominates balanced-but-dispersed mixes, and
+sharded relaxed lanes (MultiQueues) dominate skewed drain/fill phases.
+The measured grid (BENCH_pq.json) reproduces exactly that split:
+``sharded_L8`` wins every p30/p70 cell and the p50 DES cell 1.4–3x,
+while the combined queue wins balanced-uniform.  The
+:class:`AdaptiveEngine` here closes the loop — per-window EMAs over
+three cheap signals drive three decisions with hysteresis:
+
+* **add/remove balance** ``min(n_add, n_rm) / max(n_add, n_rm)`` — the
+  paper's "similar numbers of add() and removeMin()" signal;
+* **key dispersion** ``(mean - min) / (max - min)`` of each tick's live
+  add batch — scale- and location-free, so it survives the drifting
+  frontier of DES streams (near-frontier exponential arrivals give
+  ~1/ln(n) ≈ 0.13 at bench widths, uniform keys ≈ 0.5);
+* **elimination hit rate** — the sharded queue's own pre-route
+  controller EMA (:mod:`repro.core.sharded`), read per window.
+
+Decisions: (1) engine selection pqe ↔ sharded (drain one engine's
+resident set through :func:`resident`, re-insert into the other via
+zero-remove ticks); (2) live lane count L (``fold_lanes`` /
+``unfold_lanes`` drain-and-remap, so the c-relaxed bound tightens the
+moment lanes fold); (3) pre-route mode (force "off" when the hit EMA
+collapses, reopening every ``reprobe`` windows).  Hysteresis =
+two-threshold latches per signal + ``confirm`` consecutive windows +
+``cooldown`` windows between switches, so an alternating workload
+cannot thrash the engine (tests/test_adaptive.py bounds switches).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax
 import jax.numpy as jnp
 
-from repro.core.config import PQConfig
+from repro.core import pqueue
+from repro.core import sharded as shq
+from repro.core.config import EMPTY_VAL, PQConfig
+
+_I32 = jnp.int32
+_F32 = jnp.float32
+INF = jnp.inf
 
 
 def update_detach(cfg: PQConfig, detach_n, ins_since_move):
-    """New detach size after a moveHead event."""
+    """New detach size after a moveHead event (paper §2.1).
+
+    "If more than N insertions (e.g. N = 1000) occurred in the
+    sequential part since the last SL::moveHead(), we halve the number
+    of elements moved; otherwise, if less than M insertions (e.g.
+    M = 100) were made, we double this number."  Between the thresholds
+    the size holds (dead band); results clamp to
+    [detach_min, detach_max].  The N/M/bounds knobs are settable on
+    :class:`repro.core.factory.EngineSpec` (halve_threshold /
+    double_threshold / detach_*).
+    """
     halved = jnp.maximum(cfg.detach_min, detach_n // 2)
     doubled = jnp.minimum(cfg.detach_max, detach_n * 2)
     return jnp.where(
-        ins_since_move > cfg.halve_threshold, halved,
-        jnp.where(ins_since_move < cfg.double_threshold, doubled, detach_n))
+        ins_since_move > cfg.halve_threshold,
+        halved,
+        jnp.where(ins_since_move < cfg.double_threshold, doubled, detach_n),
+    )
+
+
+# ---------------------------------------------------------------------------
+# controller configuration and state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Workload-controller policy knobs (all host-side).
+
+    The balance and dispersion thresholds are two-sided hysteresis
+    bands: the latch flips high past ``*_hi``, low past ``*_lo``, and
+    holds in between.  Band placement comes from the measured workload
+    signatures: the bench's p30/p70 mixes sit at balance 0.43, p50 at
+    1.0 (band [0.5, 0.7] splits them); DES dispersion ≈ 0.13, uniform
+    ≈ 0.5 (band [0.22, 0.32]).
+    """
+
+    window: int = 8  # ticks per decision window
+    decay: float = 0.25  # per-window EMA step (seeded on first obs)
+    balance_lo: float = 0.5
+    balance_hi: float = 0.7
+    disp_lo: float = 0.22
+    disp_hi: float = 0.32
+    hit_lo: float = 0.05  # below: force preroute off (reprobe later)
+    confirm: int = 2  # consecutive windows before a switch
+    cooldown: int = 4  # windows of enforced quiet after a switch
+    reprobe: int = 16  # windows between forced preroute re-probes
+    freeze: bool = False  # forced-static: never switch anything
+    engines: Tuple[str, ...] = ("pqe", "sharded")
+
+    def __post_init__(self) -> None:
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if not (0.0 < self.decay <= 1.0):
+            raise ValueError("decay must be in (0, 1]")
+        if self.confirm < 1 or self.cooldown < 0:
+            raise ValueError("confirm >= 1, cooldown >= 0")
+        if not self.engines or any(e not in ("pqe", "sharded") for e in self.engines):
+            raise ValueError("engines must be a nonempty subset of ('pqe', 'sharded')")
+        if not (self.balance_lo <= self.balance_hi and self.disp_lo <= self.disp_hi):
+            raise ValueError("hysteresis bands must have lo <= hi")
+
+
+class Plan(NamedTuple):
+    """One engine decision: which structure, how many live lanes, and
+    the pre-route gate mode."""
+
+    kind: str  # "pqe" | "sharded"
+    lanes: int  # live L (pqe ignores it)
+    preroute: str  # "adaptive" | "on" | "off"
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerState:
+    """Host-side controller memory (functional — updates return new
+    instances, so engine states stay copy/branch-safe)."""
+
+    balance_ema: float = 0.0
+    disp_ema: float = 0.0
+    hit_ema: float = 1.0
+    seeded_balance: bool = False  # EMA seeds on first informative window
+    seeded_disp: bool = False
+    balanced: bool = False  # hysteresis latches
+    dispersed: bool = False
+    low_hit: bool = False
+    pending: Optional[Plan] = None
+    pending_n: int = 0
+    cooldown: int = 0
+    n_windows: int = 0
+    n_switches: int = 0
+    # partial-window accumulators (weighted sums over informative ticks)
+    acc_bal: float = 0.0
+    acc_bal_n: float = 0.0
+    acc_disp: float = 0.0
+    acc_disp_n: float = 0.0
+
+
+@jax.jit
+def _window_signals(add_keys, add_mask, rm_counts):
+    """Per-chunk signal sums over [T, W] op batches: weighted balance and
+    dispersion sums plus their informative-tick counts.  An idle tick
+    says nothing about the mix; a tick with <2 distinct live keys says
+    nothing about dispersion (the same dead-tick rules as the in-state
+    EMAs of :func:`repro.core.sharded._controller_update`)."""
+    m = add_mask
+    n_add = m.sum(axis=-1, dtype=_I32)  # [T]
+    rm = jnp.asarray(rm_counts, _I32)
+    opp = jnp.minimum(n_add, rm)
+    peak = jnp.maximum(n_add, rm)
+    bal = opp.astype(_F32) / jnp.maximum(peak, 1).astype(_F32)
+    bal_w = (peak > 0).astype(_F32)
+    k = add_keys.astype(_F32)
+    kmin = jnp.min(jnp.where(m, k, INF), axis=-1)
+    kmax = jnp.max(jnp.where(m, k, -INF), axis=-1)
+    mean = jnp.sum(jnp.where(m, k, 0.0), axis=-1) / jnp.maximum(n_add, 1).astype(_F32)
+    spread = kmax - kmin
+    disp = (mean - kmin) / jnp.where(spread > 0, spread, 1.0)
+    disp_w = ((n_add >= 2) & (spread > 0)).astype(_F32)
+    return (
+        jnp.sum(bal * bal_w),
+        jnp.sum(bal_w),
+        jnp.sum(disp * disp_w),
+        jnp.sum(disp_w),
+    )
+
+
+def _ema(old: float, obs: float, seeded: bool, decay: float):
+    """Seed-on-first-observation EMA (the CostEma idiom of repro.ft):
+    the first informative window sets the level outright, so cold-start
+    bias cannot hold the controller in the wrong regime for 1/decay
+    windows."""
+    if not seeded:
+        return obs, True
+    return (1.0 - decay) * old + decay * obs, True
+
+
+def decide(
+    cfg: ControllerConfig,
+    ctl: ControllerState,
+    current: Plan,
+    *,
+    max_lanes: int,
+    min_lanes: int,
+    base_preroute: str,
+) -> Tuple[ControllerState, Plan]:
+    """One window-boundary decision step: fold the accumulated signals
+    into the EMAs, advance the hysteresis latches, and return the
+    (possibly unchanged) plan.  Pure host logic — unit-testable without
+    a queue (tests/test_adaptive.py drives it directly)."""
+    balance, seeded_b = ctl.balance_ema, ctl.seeded_balance
+    if ctl.acc_bal_n > 0:
+        balance, seeded_b = _ema(
+            balance, ctl.acc_bal / ctl.acc_bal_n, seeded_b, cfg.decay
+        )
+    disp, seeded_d = ctl.disp_ema, ctl.seeded_disp
+    if ctl.acc_disp_n > 0:
+        disp, seeded_d = _ema(disp, ctl.acc_disp / ctl.acc_disp_n, seeded_d, cfg.decay)
+
+    balanced = ctl.balanced
+    if balance >= cfg.balance_hi:
+        balanced = True
+    elif balance < cfg.balance_lo:
+        balanced = False
+    dispersed = ctl.dispersed
+    if disp >= cfg.disp_hi:
+        dispersed = True
+    elif disp < cfg.disp_lo:
+        dispersed = False
+    low_hit = ctl.low_hit
+    if ctl.hit_ema < cfg.hit_lo:
+        low_hit = True
+    elif ctl.hit_ema >= 2.0 * cfg.hit_lo:
+        low_hit = False
+    n_windows = ctl.n_windows + 1
+    if low_hit and cfg.reprobe > 0 and n_windows % cfg.reprobe == 0:
+        low_hit = False  # reopen the pass so a shifted workload re-measures
+
+    can_pqe = "pqe" in cfg.engines
+    can_sharded = "sharded" in cfg.engines
+    pr = "off" if low_hit else base_preroute
+    if balanced and dispersed:
+        # the combined queue's regime; without it, fold lanes toward the
+        # combined limit (tightens the c-relaxed bound immediately)
+        target = (
+            Plan("pqe", max_lanes, pr) if can_pqe else Plan("sharded", min_lanes, pr)
+        )
+    elif can_sharded:
+        target = Plan("sharded", max_lanes, pr)
+    else:
+        target = Plan("pqe", max_lanes, pr)
+
+    new = dataclasses.replace(
+        ctl,
+        balance_ema=balance,
+        disp_ema=disp,
+        seeded_balance=seeded_b,
+        seeded_disp=seeded_d,
+        balanced=balanced,
+        dispersed=dispersed,
+        low_hit=low_hit,
+        n_windows=n_windows,
+        cooldown=max(0, ctl.cooldown - 1),
+        acc_bal=0.0,
+        acc_bal_n=0.0,
+        acc_disp=0.0,
+        acc_disp_n=0.0,
+    )
+
+    if cfg.freeze or target == current:
+        return dataclasses.replace(new, pending=None, pending_n=0), current
+    if new.cooldown > 0:
+        return dataclasses.replace(new, pending=None, pending_n=0), current
+    if new.pending == target:
+        pending_n = new.pending_n + 1
+    else:
+        pending_n = 1
+    if pending_n >= cfg.confirm:
+        new = dataclasses.replace(
+            new,
+            pending=None,
+            pending_n=0,
+            cooldown=cfg.cooldown,
+            n_switches=new.n_switches + 1,
+        )
+        return new, target
+    return dataclasses.replace(new, pending=target, pending_n=pending_n), current
+
+
+# ---------------------------------------------------------------------------
+# the adaptive engine
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AdaptiveState:
+    """Engine state: the live structure's state plus the host-side plan
+    and controller memory.  Registered as a pytree with ``inner`` as the
+    only child, so generic drivers (``jax.tree.map(jnp.copy, state)``)
+    keep working on it."""
+
+    inner: Any
+    kind: str
+    lanes: int
+    preroute: str
+    tick_count: int
+    seed: int
+    ctl: ControllerState
+
+    def tree_flatten(self):
+        aux = (
+            self.kind,
+            self.lanes,
+            self.preroute,
+            self.tick_count,
+            self.seed,
+            self.ctl,
+        )
+        return (self.inner,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, lanes, preroute, tick_count, seed, ctl = aux
+        return cls(children[0], kind, lanes, preroute, tick_count, seed, ctl)
+
+
+class AdaptiveEngine:
+    """The paper-style adaptive queue: a workload controller over the
+    combined queue (pqe) and the sharded relaxed lanes, satisfying the
+    :class:`repro.core.factory.QueueEngine` protocol.
+
+    Construction goes through the factory::
+
+        make_engine(EngineSpec(engine="adaptive", width=4096, lanes=8))
+
+    ``spec.lanes`` is the sharded candidate's full L; ``spec.min_lanes``
+    (when set below ``lanes``) additionally sizes per-lane quotas with
+    fold headroom and enables the live lane-count decision.  Left at
+    None, the sharded candidate config is IDENTICAL to the fixed
+    ``sharded`` engine's (same jit cache, same per-lane shapes) and the
+    controller's lane decision is engine selection + preroute only —
+    the fold-headroom trade is documented in DESIGN.md §11.
+
+    Ticks run in window-aligned chunks through the candidates' own jitted
+    scan drivers; decisions happen at window boundaries on the host.  An
+    engine switch drains the live structure's resident set (host-side,
+    rare) and re-inserts it through zero-remove ticks — a zero-remove
+    tick provably serves nothing, so the switch conserves the multiset
+    exactly (pinned by tests/test_adaptive.py).
+    """
+
+    kind = "adaptive"
+
+    def __init__(self, spec):
+        from repro.core import factory  # deferred: factory imports us
+
+        self.spec = spec
+        self.ctl_cfg: ControllerConfig = spec.controller or ControllerConfig()
+        self.base = factory.resolved_base(spec)
+        self.max_lanes = spec.lanes
+        self.min_lanes = spec.min_lanes if spec.min_lanes is not None else spec.lanes
+        self.base_preroute = spec.preroute
+        self._scfg_cache = {}
+        self._chunk_cache = {}
+        scfg = self._sharded_cfg(self.max_lanes, self.base_preroute)
+        self.out_w = max(spec.width, self.max_lanes * scfg.lane.r_max, self.base.r_max)
+        start = "sharded" if "sharded" in self.ctl_cfg.engines else "pqe"
+        self._start_plan = Plan(start, self.max_lanes, self.base_preroute)
+
+    # -- candidate configs ------------------------------------------------
+
+    @property
+    def width(self) -> int:
+        return self.spec.width
+
+    @property
+    def cfg(self):
+        """The sharded candidate's full-L config (duck-typed geometry
+        for drivers that read ``cfg.a_max``)."""
+        return self._sharded_cfg(self.max_lanes, self.base_preroute)
+
+    def _sharded_cfg(self, lanes: int, preroute: str):
+        key = (lanes, preroute)
+        if key not in self._scfg_cache:
+            full = (self.max_lanes, preroute)
+            if lanes == self.max_lanes:
+                cfg = shq._sharded_cfg(
+                    self.spec.width,
+                    self.max_lanes,
+                    base=self.base,
+                    slack=self.spec.slack,
+                    min_lanes=self.spec.min_lanes,
+                    preroute=preroute,
+                )
+            else:
+                # folded configs must match fold_lanes output exactly:
+                # same lane geometry, only n_lanes changes
+                cfg = dataclasses.replace(self._sharded_cfg(*full), n_lanes=lanes)
+            self._scfg_cache[key] = cfg
+        return self._scfg_cache[key]
+
+    # -- protocol surface -------------------------------------------------
+
+    def init(self, *, seed: int = 0) -> AdaptiveState:
+        plan = self._start_plan
+        if plan.kind == "sharded":
+            inner = shq.init(self._sharded_cfg(plan.lanes, plan.preroute), seed=seed)
+        else:
+            inner = pqueue.init(self.base)
+        return AdaptiveState(
+            inner=inner,
+            kind=plan.kind,
+            lanes=plan.lanes,
+            preroute=plan.preroute,
+            tick_count=0,
+            seed=seed,
+            ctl=ControllerState(),
+        )
+
+    def tick(self, state: AdaptiveState, add_keys, add_vals, add_mask, rm_count):
+        st, res = self.tick_n(
+            state,
+            add_keys[None],
+            add_vals[None],
+            add_mask[None],
+            jnp.asarray(rm_count, _I32)[None],
+        )
+        return st, shq.ShardedTickResult(
+            res.rm_keys[0], res.rm_vals[0], res.rm_served[0]
+        )
+
+    def tick_n(self, state: AdaptiveState, add_keys, add_vals, add_mask, rm_counts):
+        T = add_keys.shape[0]
+        win = self.ctl_cfg.window
+        rm_counts = jnp.asarray(rm_counts, _I32)
+        out = []
+        t0 = 0
+        while t0 < T:
+            chunk = min(T - t0, win - state.tick_count % win)
+            if t0 == 0 and chunk == T:
+                # window-aligned call: feed the stacked arrays straight
+                # through (a device-side slice would copy the whole batch)
+                ak, av, am, rm = add_keys, add_vals, add_mask, rm_counts
+            else:
+                sl = slice(t0, t0 + chunk)
+                ak, av, am = add_keys[sl], add_vals[sl], add_mask[sl]
+                rm = rm_counts[sl]
+            fn = self._chunk_fn(state.kind, state.lanes, state.preroute)
+            inner, res, sig = fn(state.inner, ak, av, am, rm)
+            out.append(self._pad(res))
+            bal, bal_n, disp, disp_n = np.asarray(sig)  # one host pull per chunk
+            ctl = dataclasses.replace(
+                state.ctl,
+                acc_bal=state.ctl.acc_bal + float(bal),
+                acc_bal_n=state.ctl.acc_bal_n + float(bal_n),
+                acc_disp=state.ctl.acc_disp + float(disp),
+                acc_disp_n=state.ctl.acc_disp_n + float(disp_n),
+            )
+            state = dataclasses.replace(
+                state,
+                inner=inner,
+                ctl=ctl,
+                tick_count=state.tick_count + chunk,
+            )
+            if state.tick_count % win == 0:
+                state = self._window_boundary(state)
+            t0 += chunk
+        if len(out) == 1:
+            k, v, s = out[0]  # window-aligned call: no concat copy
+        else:
+            k = jnp.concatenate([o[0] for o in out])
+            v = jnp.concatenate([o[1] for o in out])
+            s = jnp.concatenate([o[2] for o in out])
+        return state, shq.ShardedTickResult(k, v, s)
+
+    def stats(self, state: AdaptiveState):
+        if state.kind == "pqe":
+            return state.inner.stats
+        return shq.stats(state.inner)
+
+    def controller_stats(self, state: AdaptiveState) -> dict:
+        c = state.ctl
+        return {
+            "engine": state.kind,
+            "lanes": state.lanes,
+            "preroute": state.preroute,
+            "n_switches": c.n_switches,
+            "n_windows": c.n_windows,
+            "balance_ema": c.balance_ema,
+            "disp_ema": c.disp_ema,
+            "hit_ema": c.hit_ema,
+        }
+
+    def resident(self, state: AdaptiveState):
+        if state.kind == "pqe":
+            return pqueue.resident(self.base, state.inner)
+        cfg = self._sharded_cfg(state.lanes, state.preroute)
+        return shq.resident(cfg, state.inner.lanes)
+
+    def size(self, state: AdaptiveState):
+        if state.kind == "pqe":
+            return pqueue.size(state.inner)
+        return shq.size(state.inner)
+
+    def relax_bound(self, rm_count: int) -> int:
+        """Worst case over the candidates: the full-L sharded bound (the
+        combined queue is exact, bound = r; a caller holding the engine
+        across switches must assume the loosest)."""
+        return shq.relax_bound(
+            self._sharded_cfg(self.max_lanes, self.base_preroute),
+            rm_count,
+        )
+
+    # -- chunk execution --------------------------------------------------
+
+    def _chunk_fn(self, kind: str, lanes: int, preroute: str):
+        """One fused, donated dispatch per chunk: the candidate's scan
+        driver plus the controller's window signals in a single compiled
+        program.  Fusing matters — a separate signal dispatch with four
+        scalar device pulls costs more than the signals themselves at
+        bench widths."""
+        key = (kind, lanes, preroute)
+        if key not in self._chunk_cache:
+            if kind == "pqe":
+                cfg, drv = self.base, pqueue.tick_n
+            else:
+                cfg = self._sharded_cfg(lanes, preroute)
+                drv = shq.tick_n
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(inner, ak, av, am, rm):
+                inner, res = drv(cfg, inner, ak, av, am, rm)
+                return inner, res, jnp.stack(_window_signals(ak, am, rm))
+
+            self._chunk_cache[key] = run
+        return self._chunk_cache[key]
+
+    def _pad(self, res):
+        k, v, s = res.rm_keys, res.rm_vals, res.rm_served
+        padw = self.out_w - k.shape[-1]
+        if padw:
+            k = jnp.pad(k, ((0, 0), (0, padw)), constant_values=INF)
+            v = jnp.pad(v, ((0, 0), (0, padw)), constant_values=EMPTY_VAL)
+            s = jnp.pad(s, ((0, 0), (0, padw)), constant_values=False)
+        return k, v, s
+
+    def prewarm(self, state: AdaptiveState, ticks: int) -> None:
+        """Compile every (candidate, chunk-length) pair a ``ticks``-long
+        ``tick_n`` from the current position will dispatch, plus the
+        single-tick path — so a measured run never pays XLA compilation
+        mid-stream, whatever the controller decides (the bench calls
+        this right before its timed run)."""
+        win = self.ctl_cfg.window
+        lens = set()
+        c, left = state.tick_count % win, ticks
+        while left > 0:
+            chunk = min(left, win - c % win)
+            lens.add(chunk)
+            left -= chunk
+            c += chunk
+        w = self.width
+        # pqe states carry lanes = max_lanes (Plan convention), so the
+        # chunk-fn cache keys here must match what tick_n will ask for
+        kinds = [("pqe", self.max_lanes)]
+        lane_set = {self.max_lanes}
+        if self.min_lanes < self.max_lanes:
+            lane_set.add(self.min_lanes)
+        for ln in sorted(lane_set):
+            kinds.append(("sharded", ln))
+        for kind, ln in kinds:
+            if kind not in self.ctl_cfg.engines:
+                continue
+            if kind == "pqe":
+                inner = pqueue.init(self.base)
+            else:
+                inner = shq.init(self._sharded_cfg(ln, self.base_preroute))
+            fn = self._chunk_fn(kind, ln, self.base_preroute)
+            for T in sorted(lens):
+                ak = jnp.full((T, w), INF, _F32)
+                av = jnp.full((T, w), EMPTY_VAL, _I32)
+                am = jnp.zeros((T, w), bool)
+                rms = jnp.zeros((T,), _I32)
+                inner, _, _ = fn(inner, ak, av, am, rms)
+            jax.block_until_ready(inner)
+
+    # -- switches (host-side, window-boundary only) -----------------------
+
+    def _window_boundary(self, state: AdaptiveState) -> AdaptiveState:
+        ctl = state.ctl
+        if state.kind == "sharded":
+            ctl = dataclasses.replace(ctl, hit_ema=float(state.inner.elim_ema))
+        current = Plan(state.kind, state.lanes, state.preroute)
+        ctl, plan = decide(
+            self.ctl_cfg,
+            ctl,
+            current,
+            max_lanes=self.max_lanes,
+            min_lanes=self.min_lanes,
+            base_preroute=self.base_preroute,
+        )
+        state = dataclasses.replace(state, ctl=ctl)
+        if plan == current:
+            return state
+        return self._apply_plan(state, plan)
+
+    def _apply_plan(self, state: AdaptiveState, plan: Plan) -> AdaptiveState:
+        cur = Plan(state.kind, state.lanes, state.preroute)
+        inner = state.inner
+        if plan.kind != cur.kind:
+            inner = self._switch_engine(state, plan)
+        elif plan.kind == "sharded" and plan.lanes != cur.lanes:
+            inner = self._refold(state, plan)
+        # preroute-only changes are a pure cfg swap: ShardedState is
+        # shape-identical across gate modes, so the state carries as-is
+        return dataclasses.replace(
+            state,
+            inner=inner,
+            kind=plan.kind,
+            lanes=plan.lanes,
+            preroute=plan.preroute,
+        )
+
+    def _live_resident(self, state: AdaptiveState):
+        keys, vals, live = self.resident(state)
+        keys = np.asarray(keys).reshape(-1)
+        vals = np.asarray(vals).reshape(-1)
+        live = np.asarray(live).reshape(-1)
+        return keys[live], vals[live]
+
+    def _switch_engine(self, state: AdaptiveState, plan: Plan):
+        keys, vals = self._live_resident(state)
+        if plan.kind == "pqe":
+            inner = pqueue.init(self.base)
+            return self._reinsert_pqe(inner, keys, vals)
+        cfg = self._sharded_cfg(plan.lanes, plan.preroute)
+        inner = shq.init(cfg, seed=state.seed + state.ctl.n_switches)
+        return self._reinsert_sharded(cfg, inner, keys, vals)
+
+    def _refold(self, state: AdaptiveState, plan: Plan):
+        cur_cfg = self._sharded_cfg(state.lanes, state.preroute)
+        if plan.lanes > state.lanes:
+            _, inner = shq.unfold_lanes(cur_cfg, state.inner, plan.lanes)
+            return inner
+        host = jax.tree.map(np.asarray, state.inner)
+        new_cfg, inner, dk, dv = shq.fold_lanes(cur_cfg, host, list(range(plan.lanes)))
+        assert new_cfg == self._sharded_cfg(plan.lanes, state.preroute)
+        return self._reinsert_sharded(new_cfg, inner, dk, dv)
+
+    def _reinsert_pqe(self, inner, keys, vals):
+        w = self.base.a_max
+        for i in range(0, len(keys), w):
+            ak = np.full((w,), np.inf, np.float32)
+            av = np.full((w,), EMPTY_VAL, np.int32)
+            m = np.zeros((w,), bool)
+            ck = keys[i : i + w]
+            ak[: len(ck)] = ck
+            av[: len(ck)] = vals[i : i + w]
+            m[: len(ck)] = True
+            inner, _ = pqueue.tick(
+                self.base,
+                inner,
+                jnp.asarray(ak),
+                jnp.asarray(av),
+                jnp.asarray(m),
+                jnp.zeros((), _I32),
+            )
+        return inner
+
+    def _reinsert_sharded(self, cfg, inner, keys, vals):
+        # full-width chunks are drop-free: the permuted round-robin puts
+        # at most ceil(W/L) slots on a lane, and lane.a_max was sized
+        # for ceil(W/min_lanes) >= that
+        w = cfg.a_total
+        dropped_pre = int(inner.n_router_dropped)
+        for i in range(0, len(keys), w):
+            ak = np.full((w,), np.inf, np.float32)
+            av = np.full((w,), EMPTY_VAL, np.int32)
+            m = np.zeros((w,), bool)
+            ck = keys[i : i + w]
+            ak[: len(ck)] = ck
+            av[: len(ck)] = vals[i : i + w]
+            m[: len(ck)] = True
+            inner, _ = shq.tick(
+                cfg,
+                inner,
+                jnp.asarray(ak),
+                jnp.asarray(av),
+                jnp.asarray(m),
+                jnp.zeros((), _I32),
+            )
+        dropped = int(inner.n_router_dropped) - dropped_pre
+        if dropped:
+            raise AssertionError(
+                f"engine switch dropped {dropped} keys on re-insertion — "
+                "lane quotas under-sized for the fold target"
+            )
+        return inner
+
+
+# ---------------------------------------------------------------------------
+# lane-scale controller (distributed/elastic composition)
+# ---------------------------------------------------------------------------
+
+
+class LaneScaleController:
+    """The workload controller for the distributed queue, where an
+    engine switch is structurally unavailable (lanes live on devices):
+    the fold decision is expressed as ``lane_scale`` grant caps instead.
+
+    When the balanced-dispersed regime latches, lanes beyond
+    ``min_lanes`` are capped at ``floor`` — they shed serve work onto
+    the leading lanes through the allocator's water-fill, concentrating
+    the structure toward the combined-queue limit without moving any
+    state.  The caller (:class:`repro.ft.elastic.ElasticDistQueue`)
+    composes these caps with the fault-tolerance throttle by elementwise
+    ``min``, so a controller decision can never override a degraded
+    device's cap.
+    """
+
+    def __init__(
+        self,
+        cfg: Optional[ControllerConfig],
+        n_lanes: int,
+        min_lanes: int,
+        *,
+        floor: float = 0.25,
+    ):
+        self.cfg = cfg or ControllerConfig()
+        self.n_lanes = n_lanes
+        self.min_lanes = max(1, min(min_lanes, n_lanes))
+        self.floor = float(floor)
+        self.ctl = ControllerState()
+        self._tick = 0
+
+    def observe(self, add_keys, add_mask, rm_count) -> None:
+        """Accumulate one tick's signals; latch decisions per window."""
+        bal, bal_n, disp, disp_n = _window_signals(
+            jnp.asarray(add_keys)[None],
+            jnp.asarray(add_mask)[None],
+            jnp.asarray(rm_count, _I32)[None],
+        )
+        self.ctl = dataclasses.replace(
+            self.ctl,
+            acc_bal=self.ctl.acc_bal + float(bal),
+            acc_bal_n=self.ctl.acc_bal_n + float(bal_n),
+            acc_disp=self.ctl.acc_disp + float(disp),
+            acc_disp_n=self.ctl.acc_disp_n + float(disp_n),
+        )
+        self._tick += 1
+        if self._tick % self.cfg.window == 0:
+            # plans are irrelevant here; decide() is reused purely for
+            # its EMA + latch bookkeeping
+            self.ctl, _ = decide(
+                self.cfg,
+                self.ctl,
+                Plan("sharded", self.n_lanes, "adaptive"),
+                max_lanes=self.n_lanes,
+                min_lanes=self.min_lanes,
+                base_preroute="adaptive",
+            )
+
+    def lane_scale(self) -> np.ndarray:
+        """[n_lanes] grant-cap multipliers for the current regime."""
+        scale = np.ones((self.n_lanes,), np.float32)
+        if not self.cfg.freeze and self.ctl.balanced and self.ctl.dispersed:
+            lo = self.min_lanes
+            scale[lo:] = self.floor
+        return scale

@@ -114,7 +114,7 @@ class DistShardedPQConfig:
         return self.shard.a_total
 
 
-def make_dist_cfg(
+def _dist_cfg(
     width: int,
     n_devices: int,
     lanes_per_device: int,
@@ -127,7 +127,7 @@ def make_dist_cfg(
 ) -> DistShardedPQConfig:
     """Scale a width-`width` single-queue config onto a D-device mesh.
 
-    Per-lane geometry comes from :func:`sharded.make_sharded_cfg` with
+    Per-lane geometry comes from :func:`sharded._sharded_cfg` with
     L = n_devices * lanes_per_device total lanes, so dist(D, l) and
     single-device sharded(L = D * l) share one config modulo placement.
 
@@ -141,7 +141,7 @@ def make_dist_cfg(
     """
     if not 0 <= spare_devices < n_devices:
         raise ValueError("spare_devices must be in [0, n_devices)")
-    scfg = sharded.make_sharded_cfg(
+    scfg = sharded._sharded_cfg(
         width,
         n_devices * lanes_per_device,
         base=base,
@@ -150,6 +150,20 @@ def make_dist_cfg(
         preroute=preroute,
     )
     return DistShardedPQConfig(shard=scfg, n_devices=n_devices, axis=axis)
+
+
+def make_dist_cfg(*args, **kwargs) -> DistShardedPQConfig:
+    """Deprecated alias of the dist config builder — construction now
+    goes through :func:`repro.core.factory.make_engine`
+    (``EngineSpec(engine="dist", ...)``).  Kept for one PR so external
+    callers keep working; in-repo callers have been migrated."""
+    import warnings
+
+    warnings.warn(
+        "make_dist_cfg is deprecated; use "
+        "repro.core.factory.make_engine(EngineSpec(engine='dist', ...))",
+        DeprecationWarning, stacklevel=2)
+    return _dist_cfg(*args, **kwargs)
 
 
 def _state_specs(axis: str) -> ShardedState:
@@ -164,6 +178,7 @@ def _state_specs(axis: str) -> ShardedState:
         n_router_dropped=P(),
         elim_ema=P(),
         balance_ema=P(),
+        disp_ema=P(),
         n_preroute_elim=P(),
         n_preroute_ticks=P(),
     )
@@ -192,6 +207,7 @@ def _placement(cfg: DistShardedPQConfig, mesh: Mesh) -> ShardedState:
         n_router_dropped=NamedSharding(mesh, P()),
         elim_ema=NamedSharding(mesh, P()),
         balance_ema=NamedSharding(mesh, P()),
+        disp_ema=NamedSharding(mesh, P()),
         n_preroute_elim=NamedSharding(mesh, P()),
         n_preroute_ticks=NamedSharding(mesh, P()),
     )
@@ -258,6 +274,7 @@ def _dist_tick_body(
     # global bound: matched pairs are served from the replicated batch
     # and never touch the interconnect --
     n_adds_in = add_mask.sum(dtype=_I32)
+    in_keys, in_mask = add_keys, add_mask  # raw batch for the dispersion EMA
     (
         add_keys,
         add_vals,
@@ -270,8 +287,8 @@ def _dist_tick_body(
     ) = sharded._preroute_eliminate(
         scfg, state, add_keys, add_vals, add_mask, rm_count, union_min=union_min
     )
-    elim_ema, balance_ema = sharded._controller_update(
-        scfg, state, n_adds_in, rm_count, n_matched, elim_ran
+    elim_ema, balance_ema, disp_ema = sharded._controller_update(
+        scfg, state, in_keys, in_mask, n_adds_in, rm_count, n_matched, elim_ran
     )
 
     # -- stick-random router refresh: replicated PRNG math, identical
@@ -355,6 +372,7 @@ def _dist_tick_body(
         n_router_dropped=state.n_router_dropped + n_drop,
         elim_ema=elim_ema,
         balance_ema=balance_ema,
+        disp_ema=disp_ema,
         n_preroute_elim=state.n_preroute_elim + n_matched,
         n_preroute_ticks=state.n_preroute_ticks + elim_ran.astype(_I32),
     )
@@ -515,7 +533,7 @@ def reinsert(
     if dropped:
         raise AssertionError(
             f"re-insertion dropped {dropped} keys — survivor lane quotas "
-            "under-sized (make_dist_cfg spare_devices) and chunking failed"
+            "under-sized (EngineSpec spare_devices) and chunking failed"
         )
     return state
 
@@ -528,8 +546,9 @@ class DistShardedQueue:
     state stays explicit and flows through ``tick`` functionally, like
     every other queue in the repo::
 
-        q = DistShardedQueue(make_dist_cfg(256, n_devices=8,
-                                           lanes_per_device=2, base=cfg))
+        q = make_engine(EngineSpec(engine="dist", width=256, lanes=16,
+                                   n_devices=8, lanes_per_device=2,
+                                   base=cfg))
         state = q.init(seed=0)
         state, res = q.tick(state, keys, vals, mask, rm_count)
 
@@ -537,6 +556,8 @@ class DistShardedQueue:
     ``q.relax_bound(rm_count)`` with L = D * l, exactly as single-device
     ``sharded`` — the two serve the same stream on the same ops.
     """
+
+    kind = "dist"
 
     def __init__(self, cfg: DistShardedPQConfig, mesh: Optional[Mesh] = None):
         if mesh is None:
@@ -605,6 +626,15 @@ class DistShardedQueue:
 
     def stats(self, state: ShardedState) -> sharded.ShardedStats:
         return sharded.stats(state)
+
+    def resident(self, state: ShardedState):
+        """(keys, vals, live) of every resident element — the
+        :class:`~repro.core.factory.QueueEngine` drain surface."""
+        return sharded.resident(self.cfg.shard, state.lanes)
+
+    @property
+    def width(self) -> int:
+        return self.cfg.shard.a_total
 
     def size(self, state: ShardedState) -> jnp.ndarray:
         return sharded.size(state)

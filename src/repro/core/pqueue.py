@@ -1008,6 +1008,24 @@ def peek_min(state: PQState) -> jnp.ndarray:
     return state.min_value
 
 
+def resident(cfg: PQConfig, state: PQState):
+    """Enumerate every resident element of the queue.
+
+    Returns ``(keys [cap], vals [cap], live [cap])`` with cap =
+    seq_cap + n_buckets * bucket_cap: the sequential part is its dense
+    sorted prefix (``seq_len``), the parallel part is every finite
+    bucket slot (INF = empty by the bucket invariant).  The single-queue
+    twin of :func:`repro.core.sharded.resident` — the drain half of the
+    adaptive controller's engine switch (core/adaptive.py)."""
+    live_seq = jnp.arange(cfg.seq_cap, dtype=_I32) < state.seq_len
+    bk = state.buckets.reshape(-1)
+    bv = state.bvals.reshape(-1)
+    keys = jnp.concatenate([state.seq_keys, bk])
+    vals = jnp.concatenate([state.seq_vals, bv])
+    live = jnp.concatenate([live_seq, jnp.isfinite(bk)])
+    return keys, vals, live
+
+
 def add_batch(cfg: PQConfig, state: PQState, keys, vals=None):
     """Insert-only tick (pads/masks to a_max)."""
     n = keys.shape[0]

@@ -127,9 +127,9 @@ class ShardedPQConfig:
         return self.a_total
 
 
-def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
-                     slack: float = 1.0, min_lanes: int = None,
-                     preroute: str = "adaptive") -> ShardedPQConfig:
+def _sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
+                 slack: float = 1.0, min_lanes: int = None,
+                 preroute: str = "adaptive") -> ShardedPQConfig:
     """Scale a width-`width` single-queue config down to L lanes.
 
     Per-lane batch geometry is ceil(slack * width / L) (clamped to
@@ -164,6 +164,27 @@ def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
                            preroute=preroute)
 
 
+def make_sharded_cfg(width: int, n_lanes: int, *, base: PQConfig,
+                     slack: float = 1.0, min_lanes: int = None,
+                     preroute: str = "adaptive") -> ShardedPQConfig:
+    """Deprecated alias of the sharded config builder.
+
+    Construction now goes through :func:`repro.core.factory.make_engine`
+    (``EngineSpec(engine="sharded", ...)``), which resolves every engine
+    kind behind one spec.  This alias survives for one PR so external
+    callers keep working; in-repo callers have been migrated (enforced
+    by tests/test_factory.py).
+    """
+    import warnings
+
+    warnings.warn(
+        "make_sharded_cfg is deprecated; use "
+        "repro.core.factory.make_engine(EngineSpec(engine='sharded', ...))",
+        DeprecationWarning, stacklevel=2)
+    return _sharded_cfg(width, n_lanes, base=base, slack=slack,
+                        min_lanes=min_lanes, preroute=preroute)
+
+
 class ShardedState(NamedTuple):
     lanes: pqueue.PQState      # stacked pytree: every leaf has lead dim L
     rng: jnp.ndarray           # PRNG key for the router
@@ -180,6 +201,13 @@ class ShardedState(NamedTuple):
                                # updated only on ticks where the pass ran
                                # with a nonzero pairing opportunity
     balance_ema: jnp.ndarray   # scalar f32 EMA of min/max(n_adds, rm)
+    disp_ema: jnp.ndarray      # scalar f32 EMA of add-batch key dispersion
+                               # (mean-min)/(max-min): ~1/ln(n) for the
+                               # near-frontier exponential mixes where
+                               # sharding wins, ~0.5 for uniform keys —
+                               # the workload-controller signal that
+                               # separates the two balanced regimes
+                               # (core/adaptive.py reads it per window)
     n_preroute_elim: jnp.ndarray    # i32 pairs eliminated before routing
     n_preroute_ticks: jnp.ndarray   # i32 ticks where the pass ran
 
@@ -214,6 +242,9 @@ def init(cfg: ShardedPQConfig, *, seed: int = 0) -> ShardedState:
         # is also a probe tick, so the first mixed tick measures the rate)
         elim_ema=jnp.ones((), _F32),
         balance_ema=jnp.zeros((), _F32),
+        # neutral start inside the controller's dead band: neither
+        # regime is asserted until real add batches move the EMA
+        disp_ema=jnp.full((), 0.27, _F32),
         n_preroute_elim=jnp.zeros((), _I32),
         n_preroute_ticks=jnp.zeros((), _I32),
     )
@@ -507,18 +538,38 @@ def _preroute_eliminate(cfg: ShardedPQConfig, state: ShardedState,
                         None)
 
 
+def _dispersion(add_keys, add_mask):
+    """Shape statistic of one tick's live add batch:
+    ``(mean - min) / (max - min)`` — scale- and location-free, so it
+    survives the drifting key frontier of DES streams.  Near-frontier
+    exponential arrivals give ~1/ln(n) (~0.13 at bench widths), uniform
+    keys ~0.5.  Returns ``(disp, informative)``: a tick with fewer than
+    two distinct live keys carries no shape information."""
+    m = add_mask
+    n = m.sum(dtype=_I32)
+    k = add_keys.astype(_F32)
+    kmin = jnp.min(jnp.where(m, k, INF))
+    kmax = jnp.max(jnp.where(m, k, -INF))
+    mean = jnp.sum(jnp.where(m, k, 0.0)) / jnp.maximum(n, 1).astype(_F32)
+    spread = kmax - kmin
+    disp = (mean - kmin) / jnp.where(spread > 0, spread, 1.0)
+    return disp, (n >= 2) & (spread > 0)
+
+
 def _controller_update(cfg: ShardedPQConfig, state: ShardedState,
-                       n_adds, rm_count, n_matched, ran):
-    """EMA bookkeeping for the adaptive gate (cheap scalar math, runs
-    unconditionally — also under forced modes, so stats stay
-    meaningful).  Each EMA only moves on ticks that carry information
-    about its signal: the hit-rate EMA when the pass ran AND could have
-    paired (opportunity > 0 — an add-only or remove-only tick says
-    nothing about elimination yield), the balance EMA on any tick with
-    ops at all (an IDLE tick says nothing about the add/remove mix —
-    decaying on idle ticks would make bursty-but-balanced workloads
-    look unbalanced and close the gate on exactly the ticks that could
-    pair)."""
+                       add_keys, add_mask, n_adds, rm_count, n_matched,
+                       ran):
+    """EMA bookkeeping for the adaptive gate and the workload
+    controller (cheap scalar math, runs unconditionally — also under
+    forced modes, so stats stay meaningful).  Each EMA only moves on
+    ticks that carry information about its signal: the hit-rate EMA
+    when the pass ran AND could have paired (opportunity > 0 — an
+    add-only or remove-only tick says nothing about elimination yield),
+    the balance EMA on any tick with ops at all (an IDLE tick says
+    nothing about the add/remove mix — decaying on idle ticks would
+    make bursty-but-balanced workloads look unbalanced and close the
+    gate on exactly the ticks that could pair), and the dispersion EMA
+    on ticks whose add batch has at least two distinct keys."""
     d = jnp.asarray(cfg.elim_ema_decay, _F32)
     opportunity = jnp.minimum(n_adds, rm_count)
     hit = n_matched.astype(_F32) / jnp.maximum(opportunity, 1).astype(_F32)
@@ -530,7 +581,10 @@ def _controller_update(cfg: ShardedPQConfig, state: ShardedState,
     balance_ema = jnp.where(peak > 0,
                             (1 - d) * state.balance_ema + d * balance,
                             state.balance_ema)
-    return elim_ema, balance_ema
+    disp, disp_ok = _dispersion(add_keys, add_mask)
+    disp_ema = jnp.where(disp_ok, (1 - d) * state.disp_ema + d * disp,
+                         state.disp_ema)
+    return elim_ema, balance_ema, disp_ema
 
 
 # ---------------------------------------------------------------------------
@@ -621,11 +675,15 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
     # served below as a prefix of the result stream and never reach the
     # router (gating: ShardedPQConfig.preroute / _preroute_eliminate) --
     n_adds_in = add_mask.sum(dtype=_I32)
+    in_keys, in_mask = add_keys, add_mask   # pre-elimination batch: the
+    # controller's dispersion signal reads the RAW arrival shape, not
+    # the residual left after matched pairs were cancelled
     (add_keys, add_vals, add_mask, rm_residual, matched_k, matched_v,
      n_matched, elim_ran) = _preroute_eliminate(
         cfg, state, add_keys, add_vals, add_mask, rm_count)
-    elim_ema, balance_ema = _controller_update(
-        cfg, state, n_adds_in, rm_count, n_matched, elim_ran)
+    elim_ema, balance_ema, disp_ema = _controller_update(
+        cfg, state, in_keys, in_mask, n_adds_in, rm_count, n_matched,
+        elim_ran)
 
     # -- stick-random router refresh: the PRNG split, the permutation,
     # AND its stable inverse (the lane-grouped slot list) are all built
@@ -698,6 +756,7 @@ def _tick_impl(cfg: ShardedPQConfig, state: ShardedState, add_keys,
         n_router_dropped=state.n_router_dropped + n_drop,
         elim_ema=elim_ema,
         balance_ema=balance_ema,
+        disp_ema=disp_ema,
         n_preroute_elim=state.n_preroute_elim + n_matched,
         n_preroute_ticks=state.n_preroute_ticks + elim_ran.astype(_I32),
     )
@@ -790,6 +849,7 @@ class ShardedStats(NamedTuple):
     n_ticks: jnp.ndarray            # sharded ticks (== tick_idx)
     elim_ema: jnp.ndarray           # controller signals, as of now
     balance_ema: jnp.ndarray
+    disp_ema: jnp.ndarray           # add-batch key-dispersion EMA
     # serving observability (repro.serving): the admission controller
     # gates on queue depth, and with priority = deadline the union
     # min-of-lane-heads IS the next-to-serve deadline — its distance
@@ -808,6 +868,7 @@ def stats(state: ShardedState) -> ShardedStats:
         n_ticks=state.tick_idx,
         elim_ema=state.elim_ema,
         balance_ema=state.balance_ema,
+        disp_ema=state.disp_ema,
         depth=size(state),
         min_head=_union_min(state.lanes),
     )
@@ -945,6 +1006,7 @@ def fold_lanes(cfg: ShardedPQConfig, state: ShardedState, keep):
         n_router_dropped=jnp.asarray(state.n_router_dropped),
         elim_ema=jnp.asarray(state.elim_ema),
         balance_ema=jnp.asarray(state.balance_ema),
+        disp_ema=jnp.asarray(state.disp_ema),
         n_preroute_elim=jnp.asarray(state.n_preroute_elim),
         n_preroute_ticks=jnp.asarray(state.n_preroute_ticks),
     )

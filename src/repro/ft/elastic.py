@@ -67,7 +67,8 @@ class ElasticDistQueue:
                  seed: int = 0, tick_dt: float = 1.0,
                  suspect_after: float = 3.0, dead_after: float = 6.0,
                  collective_timeout: float = 2.0, max_retries: int = 3,
-                 ema_decay: float = 0.5, weight_floor: float = 0.25):
+                 ema_decay: float = 0.5, weight_floor: float = 0.25,
+                 controller=None):
         self.queue = queue
         self.state = queue.init(seed=seed)
         self.clock = SimClock()
@@ -84,16 +85,65 @@ class ElasticDistQueue:
         self.collective_timeout = float(collective_timeout)
         self.max_retries = int(max_retries)
         self._last_scale: Optional[np.ndarray] = None
+        # optional workload controller (repro.core.adaptive): an engine
+        # switch is structurally unavailable on a device mesh, so its
+        # fold decision arrives as extra lane_scale caps.  FT throttles
+        # always win — the two cap vectors compose by elementwise min.
+        self.controller = None
+        if controller is not None:
+            from repro.core.adaptive import LaneScaleController
+
+            n_lanes = queue.cfg.shard.n_lanes
+            self.controller = LaneScaleController(
+                controller, n_lanes,
+                min_lanes=queue.cfg.lanes_per_device,
+                floor=weight_floor)
 
     # -- introspection -----------------------------------------------------
 
     def size(self) -> int:
         return int(self.queue.size(self.state))
 
-    def stats(self):
+    def stats(self, state=None):
         """Device-side ShardedStats of the current state (incl. the
         serving observability fields depth / min_head)."""
-        return self.queue.stats(self.state)
+        return self.queue.stats(self.state if state is None else state)
+
+    # -- QueueEngine protocol (repro.core.factory) -------------------------
+    # The wrapper is stateful (the FT stack owns clock/detector/mesh), so
+    # the protocol adapters thread self.state: callers may pass the state
+    # they last got back, or None to mean "the current one".
+
+    kind = "elastic"
+
+    @property
+    def width(self) -> int:
+        return self.queue.width
+
+    def init(self, *, seed: int = 0):
+        self.state = self.queue.init(seed=seed)
+        return self.state
+
+    def tick(self, state, add_keys, add_vals, add_mask, rm_count):
+        if state is not None:
+            self.state = state
+        res, _ = self.step(add_keys, add_vals, add_mask, rm_count)
+        return self.state, res
+
+    def tick_n(self, state, add_keys, add_vals, add_mask, rm_counts):
+        if state is not None:
+            self.state = state
+        results = []
+        for t in range(len(rm_counts)):
+            res, _ = self.step(add_keys[t], add_vals[t], add_mask[t],
+                               rm_counts[t])
+            results.append(res)
+        stacked = type(results[0])(*(jnp.stack(f) for f in
+                                     zip(*results))) if results else None
+        return self.state, stacked
+
+    def resident(self, state=None):
+        return self.queue.resident(self.state if state is None else state)
 
     def capacity_scale(self) -> float:
         """Mean grant-throttle fraction over live lanes from the LAST
@@ -163,6 +213,12 @@ class ElasticDistQueue:
         removed += self._await_collective()
         suspected = {d for d in verdict["suspected"] if d in self.live}
         scale = self._lane_scale(suspected)
+        if self.controller is not None:
+            self.controller.observe(add_keys, add_mask, rm_count)
+            # min-compose: a regime decision can cap a healthy lane but
+            # can never RAISE a degraded device's FT throttle
+            scale = np.minimum(scale,
+                               self.controller.lane_scale()[:len(scale)])
         self._last_scale = np.asarray(scale)
         self.state, res = self.queue.tick(
             self.state, add_keys, add_vals, add_mask, rm_count,

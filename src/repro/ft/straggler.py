@@ -57,7 +57,11 @@ class StragglerQueue:
                 n_buckets=8, bucket_cap=max(8, width),
                 detach_min=8, detach_max=256, detach_init=8,
                 chop_patience=64)
-            cfg = shq.make_sharded_cfg(width, n_lanes, base=base)
+            from repro.core.factory import EngineSpec, make_engine
+
+            cfg = make_engine(EngineSpec(
+                engine="sharded", width=width, base=base,
+                lanes=n_lanes)).cfg
         self.cfg = cfg
         self.state = shq.init(cfg, seed=seed)
         self.items = {it.wid: it for it in items}

@@ -100,12 +100,12 @@ class RequestEngine:
     def width(self) -> int:
         """Op-batch width W of the underlying queue (survives resizes:
         the batch geometry is mesh-size independent)."""
-        return self.queue.queue.cfg.shard.a_total
+        return self.queue.width
 
     def queue_stats(self):
         """Device-side stats (incl. the new depth / min_head fields) —
         a sync; tests use it to cross-check the host-tracked depth."""
-        return self.queue.queue.stats(self.queue.state)
+        return self.queue.stats()
 
     def accounted(self) -> int:
         """Everything the engine knows about: must equal n_arrivals at

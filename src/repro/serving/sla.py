@@ -26,8 +26,7 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core.config import PQConfig
-from repro.core import distributed as dq
-from repro.ft.elastic import ElasticDistQueue
+from repro.core.factory import EngineSpec, make_engine
 from repro.ft.inject import FaultSchedule
 from repro.serving.arrivals import (
     ArrivalProcess, BurstyArrivals, DiurnalArrivals, PoissonArrivals)
@@ -62,12 +61,14 @@ def build_engine(*, n_devices: int = 1, lanes_per_device: int = 4,
     base = PQConfig(a_max=width, r_max=width, seq_cap=4 * width + 2,
                     n_buckets=8, bucket_cap=width, detach_min=8,
                     detach_max=256, detach_init=8, chop_patience=64)
-    cfg = dq.make_dist_cfg(width, n_devices, lanes_per_device, base=base,
-                           spare_devices=spare_devices, preroute=preroute)
-    ctl = ElasticDistQueue(dq.DistShardedQueue(cfg), schedule=schedule,
-                           seed=seed, tick_dt=tick_dt)
+    ctl = make_engine(
+        EngineSpec(engine="elastic", width=width, base=base,
+                   lanes=n_devices * lanes_per_device,
+                   n_devices=n_devices, lanes_per_device=lanes_per_device,
+                   spare_devices=spare_devices, preroute=preroute),
+        schedule=schedule, seed=seed, tick_dt=tick_dt)
     if depth_cap is None:
-        shard = cfg.shard
+        shard = ctl.queue.cfg.shard
         depth_cap = (shard.n_lanes * shard.lane.seq_cap) // 2
     policy = OverloadPolicy(depth_cap=depth_cap, serve_rate=float(n_slots),
                             tick_dt=tick_dt, slack=slack,

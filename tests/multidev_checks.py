@@ -43,11 +43,13 @@ def _require_forced_devices(n: int = 8) -> None:
         sys.exit(SKIP_EXIT)
 
 
-def _dist_queue(n_devices, lanes_per_device, width, base):
-    from repro.core import distributed as dq
+def _dist_queue(n_devices, lanes_per_device, width, base, spare_devices=0):
+    from repro.core.factory import EngineSpec, make_engine
 
-    cfg = dq.make_dist_cfg(width, n_devices, lanes_per_device, base=base)
-    return dq.DistShardedQueue(cfg)
+    return make_engine(EngineSpec(
+        engine="dist", width=width, base=base,
+        lanes=n_devices * lanes_per_device, n_devices=n_devices,
+        lanes_per_device=lanes_per_device, spare_devices=spare_devices))
 
 
 def check_dist_sharded():
@@ -145,8 +147,7 @@ def check_dist_resize():
     base = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16,
                     bucket_cap=32, detach_min=4, detach_max=64,
                     detach_init=8, chop_patience=8)
-    cfg = dq.make_dist_cfg(W, 8, 1, base=base, spare_devices=1)
-    q = dq.DistShardedQueue(cfg)
+    q = _dist_queue(8, 1, W, base, spare_devices=1)
     state = q.init(seed=6)
     rng = np.random.default_rng(6)
     mirror = []

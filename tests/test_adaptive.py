@@ -1,0 +1,506 @@
+"""Workload-controller tests: signals, hysteresis, and live switching.
+
+Three layers, mirroring the controller's own split:
+
+* ``decide`` is pure host logic — regime mapping, dead bands, confirm /
+  cooldown gating are driven directly with crafted EMAs;
+* ``_window_signals`` is checked on synthetic key batches with explicit
+  min/mean/max (NOT small-n exponential draws: at W=64 an exponential
+  batch lands inside the dispersion dead band by design);
+* the :class:`AdaptiveEngine` end-to-end — engine switches fire on the
+  right streams, conserve the key multiset exactly, respect fold
+  targets, and a frozen controller is bit-identical to the fixed engine
+  it wraps (the forced-static contract).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PQConfig
+from repro.core import pqueue
+from repro.core import sharded as shq
+from repro.core.adaptive import (
+    ControllerConfig,
+    ControllerState,
+    LaneScaleController,
+    Plan,
+    _window_signals,
+    decide,
+    update_detach,
+)
+from repro.core.config import EMPTY_VAL
+from repro.core.factory import EngineSpec, make_engine
+
+W = 64
+BASE = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16, bucket_cap=32,
+                detach_min=4, detach_max=64, detach_init=8, chop_patience=8)
+
+
+def _adaptive(lanes=4, controller=None, min_lanes=None, preroute="adaptive"):
+    return make_engine(EngineSpec(engine="adaptive", width=W, base=BASE,
+                                  lanes=lanes, min_lanes=min_lanes,
+                                  preroute=preroute, controller=controller))
+
+
+def _batch(keys, rm, next_val=0):
+    """One W-wide op batch with the given live keys and rm_count."""
+    ak = np.full((W,), np.inf, np.float32)
+    av = np.full((W,), EMPTY_VAL, np.int32)
+    m = np.zeros((W,), bool)
+    ak[:len(keys)] = np.asarray(keys, np.float32)
+    av[:len(keys)] = np.arange(next_val, next_val + len(keys))
+    m[:len(keys)] = True
+    return ak, av, m, np.int32(rm)
+
+
+def _stack(batches):
+    ks, vs, ms, rs = zip(*batches)
+    return (jnp.asarray(np.stack(ks)), jnp.asarray(np.stack(vs)),
+            jnp.asarray(np.stack(ms)), jnp.asarray(np.stack(rs)))
+
+
+def _uniform_keys(rng, n=32):
+    """Dispersed batch: mean sits mid-range -> disp ~= 0.5."""
+    return rng.uniform(0.0, 1000.0, n).astype(np.float32)
+
+
+def _clustered_keys(rng, n=32):
+    """Near-frontier batch: one straggler at 10x the cluster scale, so
+    (mean - min) / (max - min) ~= 0.1 regardless of n."""
+    k = rng.uniform(0.0, 100.0, n).astype(np.float32)
+    k[-1] = 1000.0
+    return k
+
+
+def _drive(eng, state, batches):
+    """Run batches through tick_n, returning served keys host-side."""
+    state, res = eng.tick_n(state, *_stack(batches))
+    served = np.asarray(res.rm_keys)[np.asarray(res.rm_served)]
+    return state, served
+
+
+def _resident_keys(eng, state):
+    keys, _, live = eng.resident(state)
+    return np.asarray(keys).reshape(-1)[np.asarray(live).reshape(-1)]
+
+
+# ---------------------------------------------------------------------------
+# update_detach (paper §2.1) — clamps and dead band
+# ---------------------------------------------------------------------------
+
+def test_update_detach_doubles_under_light_insertion():
+    # defaults: halve_threshold=1000, double_threshold=100
+    assert int(update_detach(BASE, 16, 50)) == 32
+
+
+def test_update_detach_halves_under_heavy_insertion():
+    assert int(update_detach(BASE, 16, 2000)) == 8
+
+
+def test_update_detach_dead_band_holds():
+    for ins in (100, 500, 1000):   # thresholds are strict (> / <)
+        assert int(update_detach(BASE, 16, ins)) == 16
+
+
+def test_update_detach_clamps():
+    assert int(update_detach(BASE, BASE.detach_min, 2000)) == BASE.detach_min
+    assert int(update_detach(BASE, BASE.detach_max, 0)) == BASE.detach_max
+
+
+def test_update_detach_knobs_via_spec():
+    eng = make_engine(EngineSpec(engine="pqe", width=W, base=BASE,
+                                 halve_threshold=10, double_threshold=2))
+    assert int(update_detach(eng.cfg, 16, 11)) == 8
+    assert int(update_detach(eng.cfg, 16, 1)) == 32
+    assert int(update_detach(eng.cfg, 16, 5)) == 16
+
+
+# ---------------------------------------------------------------------------
+# ControllerConfig validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(window=0),
+    dict(decay=0.0),
+    dict(decay=1.5),
+    dict(confirm=0),
+    dict(cooldown=-1),
+    dict(engines=()),
+    dict(engines=("pqe", "nope")),
+    dict(balance_lo=0.8, balance_hi=0.5),
+])
+def test_controller_config_validation(kw):
+    with pytest.raises(ValueError):
+        ControllerConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# decide() — pure-host regime mapping and hysteresis
+# ---------------------------------------------------------------------------
+
+CUR_SHARDED = Plan("sharded", 4, "adaptive")
+CUR_PQE = Plan("pqe", 4, "adaptive")
+
+
+def _obs(balance, disp, n=8.0, **kw):
+    """A ControllerState with one window of accumulated observations."""
+    return ControllerState(acc_bal=balance * n, acc_bal_n=n,
+                           acc_disp=disp * n, acc_disp_n=n, **kw)
+
+
+def _decide(ctl, current=CUR_SHARDED, cfg=None, **kw):
+    cfg = cfg or ControllerConfig(confirm=1, cooldown=0)
+    return decide(cfg, ctl, current, max_lanes=4, min_lanes=2,
+                  base_preroute="adaptive", **kw)
+
+
+def test_decide_balanced_dispersed_targets_pqe():
+    _, plan = _decide(_obs(1.0, 0.5))
+    assert plan == Plan("pqe", 4, "adaptive")
+
+
+def test_decide_balanced_clustered_targets_sharded():
+    _, plan = _decide(_obs(1.0, 0.10), current=CUR_PQE)
+    assert plan == Plan("sharded", 4, "adaptive")
+
+
+def test_decide_skewed_targets_sharded():
+    # p30/p70 signature: balance 0.43 < balance_lo, dispersion irrelevant
+    _, plan = _decide(_obs(0.43, 0.5), current=CUR_PQE)
+    assert plan == Plan("sharded", 4, "adaptive")
+
+
+def test_decide_dead_band_latches_hold():
+    # balance inside [lo, hi): an already-balanced latch holds ...
+    ctl, plan = _decide(_obs(0.6, 0.5, balanced=True, dispersed=True,
+                             seeded_balance=True, seeded_disp=True,
+                             balance_ema=0.6, disp_ema=0.5),
+                        current=CUR_PQE)
+    assert ctl.balanced and plan.kind == "pqe"
+    # ... and an unbalanced one holds too (no flip mid-band)
+    ctl, plan = _decide(_obs(0.6, 0.5, balanced=False,
+                             seeded_balance=True, balance_ema=0.6))
+    assert not ctl.balanced and plan.kind == "sharded"
+
+
+def test_decide_ema_seeds_on_first_observation():
+    ctl, _ = _decide(_obs(0.43, 0.13))
+    assert ctl.balance_ema == pytest.approx(0.43)
+    assert ctl.disp_ema == pytest.approx(0.13)
+    assert ctl.seeded_balance and ctl.seeded_disp
+    # second window blends at `decay`, not re-seeds
+    ctl2, _ = _decide(dataclasses.replace(_obs(1.0, 0.5), **{
+        k: getattr(ctl, k) for k in
+        ("balance_ema", "disp_ema", "seeded_balance", "seeded_disp")}))
+    assert ctl2.balance_ema == pytest.approx(0.75 * 0.43 + 0.25 * 1.0)
+
+
+def test_decide_idle_window_leaves_emas_alone():
+    start = ControllerState(balance_ema=0.9, disp_ema=0.5,
+                            seeded_balance=True, seeded_disp=True,
+                            balanced=True, dispersed=True)
+    ctl, plan = _decide(start, current=CUR_PQE)
+    assert ctl.balance_ema == 0.9 and ctl.disp_ema == 0.5
+    assert plan.kind == "pqe"   # no evidence, no move
+
+
+def test_decide_confirm_requires_consecutive_windows():
+    cfg = ControllerConfig(confirm=2, cooldown=0)
+    ctl, plan = _decide(_obs(1.0, 0.5), cfg=cfg)
+    assert plan == CUR_SHARDED and ctl.pending == Plan("pqe", 4, "adaptive")
+    ctl2, plan2 = _decide(
+        dataclasses.replace(_obs(1.0, 0.5), pending=ctl.pending,
+                            pending_n=ctl.pending_n,
+                            balanced=ctl.balanced, dispersed=ctl.dispersed,
+                            seeded_balance=True, seeded_disp=True,
+                            balance_ema=ctl.balance_ema,
+                            disp_ema=ctl.disp_ema), cfg=cfg)
+    assert plan2 == Plan("pqe", 4, "adaptive")
+    assert ctl2.n_switches == 1 and ctl2.pending is None
+
+
+def test_decide_flip_flop_resets_confirmation():
+    cfg = ControllerConfig(confirm=2, cooldown=0)
+    ctl, _ = _decide(_obs(1.0, 0.5), cfg=cfg)          # pending pqe
+    # next window the target swings back (fresh-seeded skewed evidence):
+    # the half-confirmed pending plan must reset, not fire later
+    ctl2, plan = _decide(
+        dataclasses.replace(_obs(0.0, 0.5), pending=ctl.pending,
+                            pending_n=ctl.pending_n), cfg=cfg)
+    assert plan == CUR_SHARDED and ctl2.pending is None
+
+
+def test_decide_cooldown_suppresses_switch():
+    ctl, plan = _decide(_obs(1.0, 0.5, cooldown=2))
+    assert plan == CUR_SHARDED and ctl.cooldown == 1
+    ctl, plan = _decide(dataclasses.replace(
+        _obs(1.0, 0.5), cooldown=ctl.cooldown,
+        balanced=ctl.balanced, dispersed=ctl.dispersed,
+        seeded_balance=True, seeded_disp=True,
+        balance_ema=ctl.balance_ema, disp_ema=ctl.disp_ema))
+    assert plan == Plan("pqe", 4, "adaptive")   # cooldown expired
+
+
+def test_decide_freeze_never_switches():
+    cfg = ControllerConfig(confirm=1, cooldown=0, freeze=True)
+    ctl, plan = _decide(_obs(1.0, 0.5), cfg=cfg)
+    assert plan == CUR_SHARDED and ctl.n_switches == 0
+    # the EMAs still track — freeze stops actuation, not observation
+    assert ctl.balance_ema == pytest.approx(1.0)
+
+
+def test_decide_sharded_only_folds_to_min_lanes():
+    cfg = ControllerConfig(confirm=1, cooldown=0, engines=("sharded",))
+    _, plan = _decide(_obs(1.0, 0.5), cfg=cfg)
+    assert plan == Plan("sharded", 2, "adaptive")
+    _, plan = _decide(_obs(0.2, 0.5), cfg=cfg)
+    assert plan == Plan("sharded", 4, "adaptive")
+
+
+def test_decide_low_hit_forces_preroute_off_and_reprobes():
+    cfg = ControllerConfig(confirm=1, cooldown=0, reprobe=4)
+    ctl, plan = _decide(_obs(0.2, 0.5, hit_ema=0.01), cfg=cfg)
+    assert ctl.low_hit and plan.preroute == "off"
+    # recovery hysteresis: needs 2 * hit_lo to clear early ...
+    ctl2, _ = _decide(dataclasses.replace(_obs(0.2, 0.5), low_hit=True,
+                                          hit_ema=0.12,
+                                          n_windows=ctl.n_windows), cfg=cfg)
+    assert not ctl2.low_hit
+    # ... or the periodic re-probe window
+    ctl3, plan3 = _decide(dataclasses.replace(
+        _obs(0.2, 0.5), low_hit=True, hit_ema=0.01, n_windows=3), cfg=cfg)
+    assert not ctl3.low_hit and plan3.preroute == "adaptive"
+
+
+# ---------------------------------------------------------------------------
+# window signals on synthetic batches
+# ---------------------------------------------------------------------------
+
+def test_window_signals_balance_and_dispersion():
+    rng = np.random.default_rng(0)
+    ak, _, m, _ = _batch(_uniform_keys(rng), 32)
+    bal, bal_n, disp, disp_n = _window_signals(
+        jnp.asarray(ak)[None], jnp.asarray(m)[None],
+        jnp.asarray([32], jnp.int32))
+    assert float(bal_n) == 1.0 and float(bal) == 1.0
+    assert float(disp_n) == 1.0 and 0.35 < float(disp) < 0.65
+
+    ak, _, m, _ = _batch(_clustered_keys(rng), 8)
+    bal, _, disp, _ = _window_signals(
+        jnp.asarray(ak)[None], jnp.asarray(m)[None],
+        jnp.asarray([8], jnp.int32))
+    assert float(bal) == pytest.approx(0.25)   # min(32,8)/max(32,8)
+    assert float(disp) < 0.2
+
+
+def test_window_signals_dead_ticks_are_uninformative():
+    ak = jnp.full((3, W), jnp.inf, jnp.float32)
+    m = jnp.zeros((3, W), bool)
+    # tick 0: fully idle; tick 1: rm only; tick 2: one single-key add
+    m = m.at[2, 0].set(True)
+    ak = ak.at[2, 0].set(5.0)
+    bal, bal_n, disp, disp_n = _window_signals(
+        ak, m, jnp.asarray([0, 16, 0], jnp.int32))
+    assert float(bal_n) == 2.0          # rm-only and 1-add ticks count
+    assert float(disp_n) == 0.0         # none says anything about spread
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveEngine end-to-end
+# ---------------------------------------------------------------------------
+
+def _conserved(inserted, served, resident):
+    lhs = np.sort(np.asarray(inserted, np.float32))
+    rhs = np.sort(np.concatenate([np.asarray(served, np.float32),
+                                  np.asarray(resident, np.float32)]))
+    assert len(lhs) == len(rhs), (len(lhs), len(rhs))
+    assert np.array_equal(lhs, rhs)
+
+
+def test_engine_switches_follow_the_stream_and_conserve_keys():
+    eng = _adaptive()
+    state = eng.init(seed=0)
+    assert state.kind == "sharded"      # sharded is the safe opener
+    rng = np.random.default_rng(1)
+    inserted, served_all = [], []
+
+    def feed(batches):
+        nonlocal state
+        for b in batches:
+            inserted.extend(np.asarray(b[0])[np.asarray(b[2])].tolist())
+        state, served = _drive(eng, state, batches)
+        served_all.extend(served.tolist())
+
+    # seed load, then a balanced-uniform phase: the combined queue's
+    # regime -> controller switches sharded -> pqe
+    feed([_batch(_uniform_keys(rng, 64), 0)])
+    feed([_batch(_uniform_keys(rng), 32) for _ in range(47)])
+    assert state.kind == "pqe"
+    assert state.ctl.n_switches == 1
+    _conserved(inserted, served_all, _resident_keys(eng, state))
+
+    # drain phase (removeMin-heavy, the p30-style skew) -> back to sharded
+    feed([_batch([], 16) for _ in range(48)])
+    assert state.kind == "sharded"
+    assert state.ctl.n_switches == 2
+    _conserved(inserted, served_all, _resident_keys(eng, state))
+    stats = eng.controller_stats(state)
+    assert stats["engine"] == "sharded" and stats["n_switches"] == 2
+
+
+def test_clustered_balanced_stream_stays_sharded():
+    # balanced but near-frontier keys: elimination + lanes keep winning,
+    # so the controller must NOT move off sharded
+    eng = _adaptive()
+    state = eng.init(seed=0)
+    rng = np.random.default_rng(2)
+    state, _ = _drive(eng, state,
+                      [_batch(_clustered_keys(rng), 32) for _ in range(48)])
+    assert state.kind == "sharded"
+    assert state.ctl.n_switches == 0
+    assert state.ctl.balanced and not state.ctl.dispersed
+
+
+def test_alternating_stream_bounds_switches():
+    # flip regime every single window: confirm + cooldown must stop the
+    # controller from thrashing (each switch needs confirm consecutive
+    # windows agreeing plus a cooldown of quiet)
+    ctl_cfg = ControllerConfig()
+    eng = _adaptive(controller=ctl_cfg)
+    state = eng.init(seed=0)
+    rng = np.random.default_rng(3)
+    n_windows = 24
+    for w in range(n_windows):
+        if w % 2 == 0:
+            batches = [_batch(_uniform_keys(rng), 32)
+                       for _ in range(ctl_cfg.window)]
+        else:
+            batches = [_batch([], 16) for _ in range(ctl_cfg.window)]
+        state, _ = _drive(eng, state, batches)
+    assert state.ctl.n_windows == n_windows
+    bound = n_windows // (ctl_cfg.confirm + ctl_cfg.cooldown) + 1
+    assert state.ctl.n_switches <= bound
+
+
+def test_freeze_is_bit_identical_to_fixed_sharded():
+    frozen = _adaptive(controller=ControllerConfig(freeze=True))
+    fixed = make_engine(EngineSpec(engine="sharded", width=W, base=BASE,
+                                   lanes=4))
+    assert frozen.cfg == fixed.cfg
+    astate, fstate = frozen.init(seed=3), fixed.init(seed=3)
+    rng = np.random.default_rng(4)
+    batches = ([_batch(_uniform_keys(rng), 32) for _ in range(16)]
+               + [_batch([], 16) for _ in range(16)])
+    args = _stack(batches)
+    astate, ares = frozen.tick_n(astate, *args)
+    fstate, fres = fixed.tick_n(fstate, *args)
+    assert astate.kind == "sharded" and astate.ctl.n_switches == 0
+    for a, f in zip(ares, fres):
+        assert np.array_equal(np.asarray(a), np.asarray(f))
+    for a, f in zip(jax.tree_util.tree_leaves(astate.inner),
+                    jax.tree_util.tree_leaves(fstate)):
+        assert np.array_equal(np.asarray(a), np.asarray(f))
+
+
+def test_pqe_only_matches_fixed_pqe():
+    solo = _adaptive(controller=ControllerConfig(engines=("pqe",)))
+    fixed = make_engine(EngineSpec(engine="pqe", width=W, base=BASE))
+    astate, fstate = solo.init(seed=0), fixed.init(seed=0)
+    assert astate.kind == "pqe"
+    rng = np.random.default_rng(5)
+    batches = [_batch(_uniform_keys(rng), 16) for _ in range(16)]
+    args = _stack(batches)
+    astate, ares = solo.tick_n(astate, *args)
+    fstate, fres = fixed.tick_n(fstate, *args)
+    assert astate.ctl.n_switches == 0
+    assert np.array_equal(np.asarray(ares.rm_keys), np.asarray(fres.rm_keys))
+    for a, f in zip(jax.tree_util.tree_leaves(astate.inner),
+                    jax.tree_util.tree_leaves(fstate)):
+        assert np.array_equal(np.asarray(a), np.asarray(f))
+
+
+def test_sharded_only_folds_and_unfolds_live_lanes():
+    eng = _adaptive(min_lanes=2,
+                    controller=ControllerConfig(engines=("sharded",)))
+    state = eng.init(seed=0)
+    assert state.lanes == 4
+    rng = np.random.default_rng(6)
+    inserted, served_all = [], []
+
+    def feed(batches):
+        nonlocal state
+        for b in batches:
+            inserted.extend(np.asarray(b[0])[np.asarray(b[2])].tolist())
+        state, served = _drive(eng, state, batches)
+        served_all.extend(served.tolist())
+
+    feed([_batch(_uniform_keys(rng, 64), 0)])
+    feed([_batch(_uniform_keys(rng), 32) for _ in range(47)])
+    assert state.kind == "sharded" and state.lanes == 2   # folded
+    _conserved(inserted, served_all, _resident_keys(eng, state))
+
+    feed([_batch([], 16) for _ in range(48)])
+    assert state.lanes == 4                               # unfolded back
+    assert state.ctl.n_switches == 2
+    _conserved(inserted, served_all, _resident_keys(eng, state))
+
+
+def test_adaptive_state_is_a_pytree():
+    eng = _adaptive()
+    state = eng.init(seed=0)
+    copy = jax.tree.map(jnp.copy, state)
+    assert copy.kind == state.kind and copy.ctl == state.ctl
+    rng = np.random.default_rng(7)
+    batches = [_batch(_uniform_keys(rng), 32) for _ in range(8)]
+    s1, r1 = eng.tick_n(state, *_stack(batches))
+    s2, r2 = eng.tick_n(copy, *_stack(batches))
+    assert np.array_equal(np.asarray(r1.rm_keys), np.asarray(r2.rm_keys))
+    assert s1.ctl == s2.ctl   # the copy replays the exact decisions
+
+
+def test_single_tick_path_and_relax_bound():
+    eng = _adaptive()
+    state = eng.init(seed=0)
+    rng = np.random.default_rng(8)
+    ak, av, m, rm = _batch(_uniform_keys(rng), 4)
+    state, res = eng.tick(state, jnp.asarray(ak), jnp.asarray(av),
+                          jnp.asarray(m), jnp.asarray(rm))
+    assert res.rm_keys.ndim == 1
+    assert int(np.asarray(res.rm_served).sum()) <= 4
+    # worst case over candidates: the full-L sharded bound
+    assert eng.relax_bound(8) == shq.relax_bound(eng.cfg, 8)
+    assert eng.relax_bound(8) >= 8
+
+
+# ---------------------------------------------------------------------------
+# LaneScaleController (the distributed/elastic composition surface)
+# ---------------------------------------------------------------------------
+
+def test_lane_scale_controller_caps_tail_lanes_in_pqe_regime():
+    ctl = LaneScaleController(ControllerConfig(), n_lanes=4, min_lanes=1,
+                              floor=0.25)
+    rng = np.random.default_rng(9)
+    assert np.array_equal(ctl.lane_scale(), np.ones(4, np.float32))
+    for _ in range(16):   # two windows of balanced-uniform
+        ak, _, m, rm = _batch(_uniform_keys(rng), 32)
+        ctl.observe(ak, m, rm)
+    assert np.array_equal(ctl.lane_scale(),
+                          np.asarray([1.0, 0.25, 0.25, 0.25], np.float32))
+    for _ in range(40):   # five windows of drain: EMA decays below lo
+        ak, _, m, rm = _batch([], 16)
+        ctl.observe(ak, m, rm)
+    assert np.array_equal(ctl.lane_scale(), np.ones(4, np.float32))
+
+
+def test_lane_scale_controller_freeze_never_caps():
+    ctl = LaneScaleController(ControllerConfig(freeze=True), n_lanes=4,
+                              min_lanes=1)
+    rng = np.random.default_rng(10)
+    for _ in range(16):
+        ak, _, m, rm = _batch(_uniform_keys(rng), 32)
+        ctl.observe(ak, m, rm)
+    assert np.array_equal(ctl.lane_scale(), np.ones(4, np.float32))

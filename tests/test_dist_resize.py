@@ -31,6 +31,7 @@ from repro.core import PQConfig
 from repro.core import distributed as dq
 from repro.core import sharded as shq
 from repro.core.config import EMPTY_VAL
+from repro.core.factory import EngineSpec, make_engine
 from repro.ft import FaultSchedule, parse_chaos
 
 W = 64
@@ -53,10 +54,10 @@ def _queue(n_devices, lanes_per_device, spare_devices=1):
             f"needs {n_devices} devices (have {len(jax.devices())}); "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=8"
         )
-    cfg = dq.make_dist_cfg(
-        W, n_devices, lanes_per_device, base=BASE, spare_devices=spare_devices
-    )
-    return dq.DistShardedQueue(cfg)
+    return make_engine(EngineSpec(
+        engine="dist", width=W, base=BASE,
+        lanes=n_devices * lanes_per_device, n_devices=n_devices,
+        lanes_per_device=lanes_per_device, spare_devices=spare_devices))
 
 
 def _batch(keys, vals):
@@ -205,13 +206,16 @@ def test_resize_matches_single_device_fold():
 
 def test_resize_validation():
     """Error surface that needs no extra devices (tier-1 coverage)."""
-    cfg = dq.make_dist_cfg(W, 1, 4, base=BASE)
-    q = dq.DistShardedQueue(cfg)
+    q = make_engine(EngineSpec(engine="dist", width=W, base=BASE, lanes=4,
+                               n_devices=1, lanes_per_device=4))
+    cfg = q.cfg
     state = q.init(seed=0)
     with pytest.raises(ValueError, match="last device"):
         dq.resize(q.cfg, q.mesh, state, 0)
     with pytest.raises(ValueError, match="spare_devices"):
-        dq.make_dist_cfg(W, 2, 2, base=BASE, spare_devices=2)
+        make_engine(EngineSpec(engine="dist", width=W, base=BASE, lanes=4,
+                               n_devices=2, lanes_per_device=2,
+                               spare_devices=2))
     with pytest.raises(ValueError):
         shq.fold_lanes(cfg.shard, jax.tree.map(np.asarray, state), [])
     with pytest.raises(ValueError):
@@ -223,7 +227,8 @@ def test_resize_validation():
 def test_unfold_lanes_roundtrip():
     """fold then unfold restores L with empty new lanes; resident
     multiset untouched (tier-1: pure single-device sharded)."""
-    scfg = shq.make_sharded_cfg(W, 4, base=BASE, min_lanes=2)
+    scfg = make_engine(EngineSpec(engine="sharded", width=W, base=BASE,
+                                  lanes=4, min_lanes=2)).cfg
     state = shq.init(scfg, seed=1)
     rng = np.random.default_rng(1)
     keys = np.round(rng.uniform(0, 100, W), 3).astype(np.float32)

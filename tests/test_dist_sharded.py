@@ -28,6 +28,7 @@ from repro.core import PQConfig
 from repro.core import distributed as dq
 from repro.core import sharded as shq
 from repro.core.config import EMPTY_VAL
+from repro.core.factory import EngineSpec, make_engine
 
 W = 64
 BASE = PQConfig(
@@ -49,10 +50,17 @@ def _queue(n_devices, lanes_per_device, preroute="adaptive"):
             f"needs {n_devices} devices (have {len(jax.devices())}); "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=8"
         )
-    cfg = dq.make_dist_cfg(
-        W, n_devices, lanes_per_device, base=BASE, preroute=preroute
+    return make_engine(
+        EngineSpec(
+            engine="dist",
+            width=W,
+            base=BASE,
+            lanes=n_devices * lanes_per_device,
+            n_devices=n_devices,
+            lanes_per_device=lanes_per_device,
+            preroute=preroute,
+        )
     )
-    return dq.DistShardedQueue(cfg)
 
 
 def _batch(keys, vals):
@@ -172,7 +180,7 @@ def test_dist_drains_exactly(n_devices):
 
 
 def test_dist_cfg_validation():
-    scfg = shq.make_sharded_cfg(W, 8, base=BASE)
+    scfg = make_engine(EngineSpec(engine="sharded", width=W, base=BASE, lanes=8)).cfg
     with pytest.raises(ValueError):
         dq.DistShardedPQConfig(shard=scfg, n_devices=3)  # 8 lanes % 3 != 0
     with pytest.raises(ValueError):

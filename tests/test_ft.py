@@ -11,6 +11,7 @@ import pytest
 from repro.configs import reduced_config
 from repro.core import distributed as dq
 from repro.core.config import EMPTY_VAL, PQConfig
+from repro.core.factory import EngineSpec, make_engine
 from repro.data import SyntheticLM
 from repro.ft import (CostEma, ElasticDistQueue, ElasticTrainer, FailureDetector,
                       FaultEvent, FaultInjector, FaultSchedule, SimClock,
@@ -138,8 +139,9 @@ def _tiny_dist_queue(n_devices=1, width=64):
     base = PQConfig(a_max=width, r_max=width, seq_cap=4 * width + 2,
                     n_buckets=8, bucket_cap=width, detach_min=8,
                     detach_max=256, detach_init=8, chop_patience=64)
-    cfg = dq.make_dist_cfg(width, n_devices, 4 // n_devices, base=base)
-    return dq.DistShardedQueue(cfg)
+    return make_engine(EngineSpec(
+        engine="dist", width=width, base=base, lanes=4,
+        n_devices=n_devices, lanes_per_device=4 // n_devices))
 
 
 def test_elastic_controller_single_device():
@@ -316,11 +318,12 @@ def test_retry_burn_escalates_to_declare_dead():
     base = PQConfig(a_max=64, r_max=64, seq_cap=4 * 64 + 2, n_buckets=8,
                     bucket_cap=64, detach_min=8, detach_max=256,
                     detach_init=8, chop_patience=64)
-    cfg = dq.make_dist_cfg(64, 2, 2, base=base, spare_devices=1)
     sched = FaultSchedule([FaultEvent("partition", 1, 2.0, 1e6)])
-    ctl = ElasticDistQueue(dq.DistShardedQueue(cfg), schedule=sched,
-                           seed=0, suspect_after=1e7, dead_after=1e8,
-                           collective_timeout=1.5, max_retries=2)
+    ctl = make_engine(
+        EngineSpec(engine="elastic", width=64, base=base, lanes=4,
+                   n_devices=2, lanes_per_device=2, spare_devices=1),
+        schedule=sched, seed=0, suspect_after=1e7, dead_after=1e8,
+        collective_timeout=1.5, max_retries=2)
     w = ctl.queue.cfg.shard.a_total
     rng = np.random.default_rng(0)
     submitted = served = 0

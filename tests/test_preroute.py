@@ -22,11 +22,17 @@ import pytest
 
 from repro.core import PQConfig
 from repro.core import sharded as shq
+from repro.core.factory import EngineSpec, make_engine
 from repro.core.config import EMPTY_VAL
 
 W = 64
 BASE = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16, bucket_cap=32,
                 detach_min=4, detach_max=64, detach_init=8, chop_patience=8)
+
+
+def _scfg(lanes, **kw):
+    return make_engine(EngineSpec(engine="sharded", width=W,
+                                  base=BASE, lanes=lanes, **kw)).cfg
 
 
 def _tick(cfg, state, keys, vals, n_rm):
@@ -76,8 +82,8 @@ def _run_workload(cfg, seed, ticks=40):
 def test_forced_on_off_same_served_multiset(lanes):
     """Forced on vs forced off: identical served multiset after a full
     drain, each equal to the inserted multiset (conservation)."""
-    on = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="on")
-    off = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="off")
+    on = _scfg(lanes, preroute="on")
+    off = _scfg(lanes, preroute="off")
     ins_on, got_on, st_on = _run_workload(on, seed=5)
     ins_off, got_off, st_off = _run_workload(off, seed=5)
     assert ins_on == ins_off                      # same seeded workload
@@ -94,8 +100,8 @@ def test_forced_on_off_same_served_multiset(lanes):
 
 def test_adaptive_same_served_multiset_as_off():
     """The adaptive gate is also conservation-neutral end to end."""
-    ad = shq.make_sharded_cfg(W, 4, base=BASE, preroute="adaptive")
-    off = shq.make_sharded_cfg(W, 4, base=BASE, preroute="off")
+    ad = _scfg(4, preroute="adaptive")
+    off = _scfg(4, preroute="off")
     ins_a, got_a, _ = _run_workload(ad, seed=11)
     ins_o, got_o, _ = _run_workload(off, seed=11)
     assert ins_a == ins_o
@@ -109,7 +115,7 @@ def test_preroute_on_respects_relax_bound(lanes):
     within the c smallest of the union (pre-tick contents + adds) —
     the min-of-lane-heads bound means a matched add can never displace
     a smaller stored key."""
-    cfg = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="on")
+    cfg = _scfg(lanes, preroute="on")
     state = shq.init(cfg, seed=1)
     rng = np.random.default_rng(42)
     mirror = []
@@ -136,7 +142,7 @@ def test_preroute_serves_eligible_adds_directly():
     """An add below the union minimum pairs with a remove in the SAME
     tick and shows up in the removed stream; the lane counters show the
     pair never reached a lane."""
-    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="on")
+    cfg = _scfg(4, preroute="on")
     state = shq.init(cfg, seed=0)
     # standing load far above the incoming keys
     high = np.linspace(500, 600, 32).astype(np.float32)
@@ -171,7 +177,7 @@ def test_adaptive_gate_disengages_and_reengages():
     so the balance signal is the controller's durable off-switch and the
     hit-rate EMA guards the transients.
     """
-    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="adaptive")
+    cfg = _scfg(4, preroute="adaptive")
     state = shq.init(cfg, seed=0)
     rng = np.random.default_rng(0)
 
@@ -211,7 +217,7 @@ def test_balance_ema_frozen_on_idle_ticks():
     the balance EMA must freeze, not decay — otherwise bursty-but-
     balanced workloads (balanced tick, then idle gaps) look unbalanced
     and the gate closes on exactly the ticks that could pair."""
-    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="adaptive")
+    cfg = _scfg(4, preroute="adaptive")
     state = shq.init(cfg, seed=0)
     rng = np.random.default_rng(2)
     # a few balanced ticks push the balance EMA up
@@ -240,7 +246,7 @@ def test_balance_ema_frozen_on_idle_ticks():
 def test_preroute_counts_capped_by_result_width():
     """rm_count beyond the result stream width is clamped: the tick can
     never claim more serves than the stream can carry."""
-    cfg = shq.make_sharded_cfg(W, 4, base=BASE, preroute="on")
+    cfg = _scfg(4, preroute="on")
     state = shq.init(cfg, seed=0)
     keys = np.linspace(1, 64, W).astype(np.float32)
     state, res = _tick(cfg, state, keys, np.arange(W, dtype=np.int32),

@@ -22,10 +22,16 @@ import pytest
 from repro.core import PQConfig
 from repro.core import sharded as shq
 from repro.core.config import EMPTY_VAL
+from repro.core.factory import EngineSpec, make_engine
 
 W = 64
 BASE = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=16, bucket_cap=32,
                 detach_min=4, detach_max=64, detach_init=8, chop_patience=8)
+
+
+def _scfg(lanes, **kw):
+    return make_engine(EngineSpec(engine="sharded", width=W, base=BASE,
+                                  lanes=lanes, **kw)).cfg
 
 
 def _tick(cfg, state, keys, vals, n_rm):
@@ -42,7 +48,7 @@ def _tick(cfg, state, keys, vals, n_rm):
 @pytest.mark.parametrize("lanes", [2, 8])
 def test_sharded_c_relaxed_removals(lanes):
     """Every removed key is within the c smallest of the union state."""
-    cfg = shq.make_sharded_cfg(W, lanes, base=BASE)
+    cfg = _scfg(lanes)
     state = shq.init(cfg, seed=1)
     rng = np.random.default_rng(42)
     mirror = []         # exact union multiset (python mirror)
@@ -83,7 +89,7 @@ def test_sharded_c_relaxed_removals(lanes):
 @pytest.mark.parametrize("lanes", [2, 8])
 def test_sharded_drains_exactly(lanes):
     """Relaxed removal order, exact multiset: draining returns every key."""
-    cfg = shq.make_sharded_cfg(W, lanes, base=BASE)
+    cfg = _scfg(lanes)
     state = shq.init(cfg, seed=3)
     rng = np.random.default_rng(7)
     inserted = []
@@ -109,7 +115,7 @@ def test_sharded_drains_exactly(lanes):
 
 
 def test_sharded_router_sticks_and_resamples():
-    cfg = shq.make_sharded_cfg(W, 4, base=BASE)
+    cfg = _scfg(4)
     assert cfg.stick > 1
     state = shq.init(cfg, seed=0)
     routes = []
@@ -125,7 +131,7 @@ def test_sharded_router_sticks_and_resamples():
 
 
 def test_sharded_spreads_load_across_lanes():
-    cfg = shq.make_sharded_cfg(W, 8, base=BASE)
+    cfg = _scfg(8)
     state = shq.init(cfg, seed=0)
     rng = np.random.default_rng(0)
     for t in range(8):

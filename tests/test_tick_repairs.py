@@ -22,6 +22,7 @@ import pytest
 from repro.core import EMPTY_VAL, PQConfig
 from repro.core import pqueue
 from repro.core import sharded as shq
+from repro.core.factory import EngineSpec, make_engine
 
 W = 64
 # tiny bucket_cap so adds overflow a bucket (rebalance); small detach
@@ -29,6 +30,11 @@ W = 64
 BASE = PQConfig(a_max=W, r_max=W, seq_cap=512, n_buckets=4, bucket_cap=8,
                 detach_min=4, detach_max=64, detach_init=8,
                 chop_patience=3)
+
+
+def _scfg(lanes, **kw):
+    return make_engine(EngineSpec(engine="sharded", width=W,
+                                  base=BASE, lanes=lanes, **kw)).cfg
 
 
 def _batch(keys, vals, w):
@@ -53,7 +59,7 @@ def test_fused_lane_tick_matches_vmapped_reference(lanes):
     # lanes the FULL batch and rm_count, so any pre-route match inside
     # shq.tick would (correctly) diverge from it — the pre-route layer
     # has its own equivalence/conservation suite in tests/test_preroute.py
-    cfg = shq.make_sharded_cfg(W, lanes, base=BASE, preroute="off")
+    cfg = _scfg(lanes, preroute="off")
     lc = cfg.lane
     state = shq.init(cfg, seed=7)
     rng = np.random.default_rng(11)
@@ -177,7 +183,7 @@ def test_tick_n_matches_eager_ticks():
 
 
 def test_sharded_tick_n_matches_eager_ticks():
-    cfg = shq.make_sharded_cfg(W, 4, base=BASE)
+    cfg = _scfg(4)
     rng = np.random.default_rng(9)
     T = 8
     aks, avs, masks, rms = [], [], [], []
