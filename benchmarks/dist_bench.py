@@ -58,12 +58,22 @@ def _cell_name(p_add: float, key_dist: str) -> str:
     return f"w{WIDTH}_p{int(round(p_add * 100))}_{key_dist}_dist"
 
 
-def bench_dist_mix(p_add: float, key_dist: str, preroute: str, lane_scale=None) -> dict:
+def bench_dist_mix(
+    p_add: float,
+    key_dist: str,
+    preroute: str,
+    lane_scale=None,
+    quality: bool = False,
+) -> dict:
     """us_per_tick of the D=8 x l=1 mesh queue on one workload cell
     (scan driver, min dispatch overhead — the dist twin of bench_mix).
 
     ``lane_scale`` is the degraded-mode grant throttle ([L] f32 fed to
-    every tick); None is the healthy unthrottled queue."""
+    every tick); None is the healthy unthrottled queue.  ``quality``
+    replays the timed run against the exact reference
+    (repro.quality.harness) and attaches the rank-error / staleness
+    summary under ``"quality"`` — computed after the clock stops, on
+    results tick_n materializes either way."""
     from repro.core.factory import EngineSpec, make_engine
 
     base = pq_bench.make_cfg(WIDTH)
@@ -108,46 +118,103 @@ def bench_dist_mix(p_add: float, key_dist: str, preroute: str, lane_scale=None) 
     s2, _ = q.tick_n(spare, stak, stav, stam, rms, scale)
     jax.block_until_ready(s2)
     t0 = time.perf_counter()
-    state, _ = q.tick_n(state, stak, stav, stam, rms, scale)
+    state, res = q.tick_n(state, stak, stav, stam, rms, scale)
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
 
     st = q.stats(state)
-    return {
+    out = {
         "us_per_tick": dt / TICKS * 1e6,
         "preroute_elim": int(st.n_preroute_elim),
         "elim_ema": float(st.elim_ema),
     }
+    if quality:
+        from repro.quality.harness import replay
+
+        qs = replay(
+            np.stack([np.asarray(b[0]) for b in batches]),
+            np.stack([np.asarray(b[2]) for b in batches]),
+            np.asarray(res.rm_keys),
+            np.asarray(res.rm_served),
+            np.full((TICKS,), n_rm, np.int64),
+            warm_keys=keys,
+        )
+        qs["relax_bound"] = int(q.relax_bound(n_rm))
+        qs["rm_count"] = int(n_rm)
+        # conservation audit (mirrors pq_bench): nonzero ``lost`` means
+        # the engine shed keys (capacity overflow) and the replay's
+        # no-drop assumption is broken — the gate exempts such records.
+        _, _, live = q.resident(state)
+        n_in = n + sum(int(np.asarray(b[2]).sum()) for b in batches)
+        n_out = int(np.asarray(res.rm_served).sum())
+        qs["lost"] = n_in - n_out - int(np.asarray(live).sum())
+        out["quality"] = qs
+    return out
 
 
-def run_cells() -> dict:
-    """All cells, min-of-RUNS each; returns {cell: {impl: us}}."""
+#: per-impl quality record copied into the payload (rank error and
+#: staleness of the rep-0 run — deterministic given the seed, so the
+#: min-of-RUNS timing and the quality numbers describe the same stream)
+QUALITY_KEYS = (
+    "rank_err_p50",
+    "rank_err_p99",
+    "rank_err_max",
+    "stale_p50",
+    "stale_p99",
+    "stale_max",
+    "n_served",
+    "relax_bound",
+    "rm_count",
+    "lost",
+)
+
+
+def run_cells() -> tuple:
+    """All cells, min-of-RUNS each; returns ({cell: {impl: us}},
+    {cell: {impl: quality-record}})."""
     ndev = len(jax.devices())
     assert ndev == N_DEVICES, (
         f"host device count is {ndev}, wanted {N_DEVICES} — "
         "--xla_force_host_platform_device_count not honored"
     )
     out = {}
+    quality = {}
     for p_add, key_dist in CELLS:
         name = _cell_name(p_add, key_dist)
         cell = {}
+        qcell = {}
         runs = [
             pq_bench.bench_mix(
-                "sharded", WIDTH, p_add, ticks=TICKS, key_dist=key_dist, lanes=8
+                "sharded",
+                WIDTH,
+                p_add,
+                ticks=TICKS,
+                key_dist=key_dist,
+                lanes=8,
+                quality=i == 0,
             )
-            for _ in range(RUNS)
+            for i in range(RUNS)
         ]
         cell["sharded_L8"] = round(min(r["us_per_tick"] for r in runs), 2)
+        qcell["sharded_L8"] = {k: runs[0][k] for k in QUALITY_KEYS}
         for impl, preroute in (
             ("dist_sharded_D8", "adaptive"),
             ("dist_sharded_D8_noelim", "off"),
         ):
-            runs = [bench_dist_mix(p_add, key_dist, preroute) for _ in range(RUNS)]
+            runs = [
+                bench_dist_mix(p_add, key_dist, preroute, quality=i == 0)
+                for i in range(RUNS)
+            ]
             best = min(runs, key=lambda r: r["us_per_tick"])
             cell[impl] = round(best["us_per_tick"], 2)
-            extra = f"preroute_elim={best['preroute_elim']}"
+            qcell[impl] = {k: runs[0]["quality"][k] for k in QUALITY_KEYS}
+            extra = (
+                f"preroute_elim={best['preroute_elim']}"
+                f"|rank_err_p99={qcell[impl]['rank_err_p99']}"
+            )
             print(f"dist_{impl}_{name},{cell[impl]:.2f},{extra}")
         out[name] = cell
+        quality[name] = qcell
         ratio = cell["dist_sharded_D8"] / cell["sharded_L8"]
         print(
             f"dist_overhead_{name},0.00,"
@@ -155,13 +222,14 @@ def run_cells() -> dict:
             f"|elim_win="
             f"{cell['dist_sharded_D8_noelim'] / cell['dist_sharded_D8']:.2f}x"
         )
-    out[f"w{WIDTH}_p50_des_dist_degraded"] = run_degraded_cell(
+    dname = f"w{WIDTH}_p50_des_dist_degraded"
+    out[dname], quality[dname] = run_degraded_cell(
         out[f"w{WIDTH}_p50_des_dist"]["dist_sharded_D8"]
     )
-    return out
+    return out, quality
 
 
-def run_degraded_cell(healthy_us: float) -> dict:
+def run_degraded_cell(healthy_us: float) -> tuple:
     """The graceful-degradation cell (ISSUE 6 acceptance): D=8 with one
     straggling device grant-throttled to the EMA floor (0.25), p50 DES.
 
@@ -169,12 +237,19 @@ def run_degraded_cell(healthy_us: float) -> dict:
     same process, so the <2x wedging gate compares like with like (same
     host load, same compile cache) — a throttled straggler must DEGRADE
     throughput, never stall the synchronized round.
+
+    The degraded quality record is measured (the straggler holds back
+    its local minima, so rank error grows — that IS degraded mode
+    trading quality for liveness) but EXEMPT from the regression gate's
+    relax-bound assert: the bound's balanced-router assumption is
+    exactly what the throttle breaks (scripts/check_bench_regression.py
+    skips ``*_degraded`` impls; DESIGN.md §12).
     """
     scale = np.ones((N_DEVICES * LANES_PER_DEVICE,), np.float32)
     scale[:LANES_PER_DEVICE] = 0.25  # device 0 at the CostEma weight floor
     runs = [
-        bench_dist_mix(0.5, "des", "adaptive", lane_scale=scale)
-        for _ in range(RUNS)
+        bench_dist_mix(0.5, "des", "adaptive", lane_scale=scale, quality=i == 0)
+        for i in range(RUNS)
     ]
     degraded_us = round(min(r["us_per_tick"] for r in runs), 2)
     ratio = degraded_us / healthy_us
@@ -186,14 +261,20 @@ def run_degraded_cell(healthy_us: float) -> dict:
         f"dist_degraded_w{WIDTH}_p50_des,{degraded_us:.2f},"
         f"degraded/healthy={ratio:.2f}x|gate=2.0x"
     )
-    return {"dist_sharded_D8": healthy_us, "dist_sharded_D8_degraded": degraded_us}
+    cell = {"dist_sharded_D8": healthy_us, "dist_sharded_D8_degraded": degraded_us}
+    qcell = {
+        "dist_sharded_D8_degraded": {
+            k: runs[0]["quality"][k] for k in QUALITY_KEYS
+        }
+    }
+    return cell, qcell
 
 
 def main() -> None:
     """Emits the cells plus their workload metadata in ONE payload, so
     benchmarks/run.py records what was measured without keeping its own
     copy of the cell definition (single source of truth: this file)."""
-    cells = run_cells()
+    cells, quality = run_cells()
     payload = {
         "meta": {
             "width": WIDTH,
@@ -207,6 +288,7 @@ def main() -> None:
             "runner": "benchmarks/dist_bench.py subprocess, forced host devices",
         },
         "cells": cells,
+        "quality": quality,
     }
     print("DIST_CELLS_JSON " + json.dumps(payload))
 

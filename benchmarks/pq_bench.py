@@ -99,6 +99,10 @@ def gen_mix_batches(width: int, n_add: int, n_rm: int, ticks: int, rng,
 
 
 def _warm(eng, rng):
+    """Pre-warm to the paper's 2000-element stable state.  Returns
+    (state, warm_keys): the keys are the quality replay's initial
+    resident multiset (zero-remove ticks serve nothing and the router
+    drops nothing at slack 1.0, so everything inserted is resident)."""
     state = eng.init(seed=0)
     w = eng.width
     keys = rng.uniform(0, KEY_HI, WARM_ELEMENTS).astype(np.float32)
@@ -111,7 +115,7 @@ def _warm(eng, rng):
         mask[:len(chunk)] = True
         state, _ = eng.tick(state, jnp.asarray(ak), jnp.asarray(av),
                             jnp.asarray(mask), jnp.asarray(0))
-    return state
+    return state, keys
 
 
 def _stack(batches):
@@ -124,7 +128,8 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
               seed: int = 0, key_dist: str = "uniform",
               lanes: int = DEFAULT_LANES, preroute: str = "adaptive",
               min_lanes: int = None, settle: int = 0,
-              window: int = None, scan: bool = True) -> Dict[str, float]:
+              window: int = None, scan: bool = True,
+              quality: bool = False) -> Dict[str, float]:
     """Throughput of one implementation at one width and add-fraction.
 
     key_dist:
@@ -141,12 +146,23 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
     would have.  `scan=True` drives engines with a scan tick_n
     (SCAN_KINDS) in one dispatch; others fall back to the eager loop.
 
+    `quality=True` additionally replays the run's served stream against
+    the exact reference (repro.quality.harness) and adds the rank-error
+    / staleness fields (rank_err_{p50,p99,max}, stale_{p50,p99,max},
+    relax_bound, rm_count, lost) to the result.  ``lost`` counts keys
+    the engine silently shed (capacity overflow on net-filling mixes);
+    nonzero means the replay's no-drop assumption is broken and the
+    record is exempt from the envelope gate.  The replay happens AFTER the
+    clock stops, on the results the timed run already materializes —
+    settle ticks feed the reference without entering the aggregates, so
+    the quality window and the timing window coincide.
+
     Returns {us_per_tick, mops_per_s, ...stats}.
     """
     eng = make_impl_engine(impl, width, lanes=lanes, preroute=preroute,
                            min_lanes=min_lanes, window=window)
     rng = np.random.default_rng(seed)
-    state = _warm(eng, rng)
+    state, warm_keys = _warm(eng, rng)
 
     if eng.kind == "adaptive" and settle:
         # re-phase the decision windows to the measured stream (warm
@@ -168,14 +184,21 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
     rmc = jnp.asarray(n_rm, jnp.int32)
 
     use_scan = scan and eng.kind in SCAN_KINDS
+    q_res = []            # per-segment (rm_keys [t, out_w], rm_served)
     if settle_b:
         if use_scan:
             sk, sv, sm = _stack(settle_b)
-            state, _ = eng.tick_n(state, sk, sv, sm,
-                                  jnp.full((settle,), n_rm, jnp.int32))
+            state, sres = eng.tick_n(state, sk, sv, sm,
+                                     jnp.full((settle,), n_rm, jnp.int32))
+            if quality:
+                q_res.append((np.asarray(sres.rm_keys),
+                              np.asarray(sres.rm_served)))
         else:
             for b in settle_b:
-                state, _ = eng.tick(state, *b, rmc)
+                state, sres = eng.tick(state, *b, rmc)
+                if quality:
+                    q_res.append((np.asarray(sres.rm_keys)[None],
+                                  np.asarray(sres.rm_served)[None]))
         jax.block_until_ready(state)
 
     # the donating ticks consume their state argument: warm up / compile
@@ -196,16 +219,49 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
     else:
         s2, _ = eng.tick(spare, *timed_b[0], rmc)
         jax.block_until_ready(s2)
+        timed_res = []
         t0 = time.perf_counter()
         for t in range(ticks):
             state, res = eng.tick(state, *timed_b[t], rmc)
+            if quality:
+                timed_res.append(res)
         jax.block_until_ready(state)
         dt = time.perf_counter() - t0
+        if quality:
+            for r in timed_res:
+                q_res.append((np.asarray(r.rm_keys)[None],
+                              np.asarray(r.rm_served)[None]))
 
     out = {
         "us_per_tick": dt / ticks * 1e6,
         "mops_per_s": width * ticks / dt / 1e6,
     }
+    if quality:
+        if use_scan:
+            q_res.append((np.asarray(res.rm_keys),
+                          np.asarray(res.rm_served)))
+        from repro.quality.harness import replay
+        out.update(replay(
+            np.stack([np.asarray(b[0]) for b in batches]),
+            np.stack([np.asarray(b[2]) for b in batches]),
+            np.concatenate([k for k, _ in q_res]),
+            np.concatenate([s for _, s in q_res]),
+            np.full((len(batches),), n_rm, np.int64),
+            warm_keys=warm_keys, record_from=settle))
+        out["relax_bound"] = int(eng.relax_bound(n_rm))
+        out["rm_count"] = int(n_rm)
+        # conservation audit: the replay assumes the engine drops
+        # nothing, but a net-filling mix (n_add > n_rm) eventually
+        # overflows the finite structure and keys are silently shed.
+        # Shed keys sit in the meter's union as phantoms and, on DES
+        # streams (drops cluster at the serve frontier), inflate every
+        # later rank — so lossy records are measured-but-exempt in the
+        # regression gate (scripts/check_bench_regression.py).
+        _, _, live = eng.resident(state)
+        n_in = int(warm_keys.size) + sum(
+            int(np.asarray(b[2]).sum()) for b in batches)
+        n_out = sum(int(s.sum()) for _, s in q_res)
+        out["lost"] = n_in - n_out - int(np.asarray(live).sum())
     kind = eng.kind
     if kind == "adaptive":
         for k, v in eng.controller_stats(state).items():

@@ -27,6 +27,20 @@ import numpy as np
 
 WIDTHS = (8, 16, 32, 64, 128)
 
+#: per-impl quality record (rank error / staleness of the rep-0 run —
+#: deterministic given the seed, so the min-of-reps timing and these
+#: numbers describe the same stream) copied into BENCH_pq.json's
+#: "quality" section; benchmarks/dist_bench.py emits the same shape
+QUALITY_KEYS = ("rank_err_p50", "rank_err_p99", "rank_err_max",
+                "stale_p50", "stale_p99", "stale_max",
+                "n_served", "relax_bound", "rm_count", "lost")
+
+#: rank_err_p99 budget of the tuner demo cell — roughly the w4096 L=8
+#: envelope, i.e. "as relaxed as the widest engine we ship", so the
+#: tuner's job is to CONFIRM the wide engine fits and the demo prices
+#: what that budget buys over the strict exact baseline
+TUNER_BUDGET = 4096.0
+
 
 def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.2f},{derived}")
@@ -278,6 +292,38 @@ def _grid_cell_name(width: int, p_add: float, key_dist: str) -> str:
     return f"w{width}_p{int(round(p_add * 100))}_{key_dist}"
 
 
+def _tuner_demo(results: dict) -> dict:
+    """Run the quality auto-tuner (repro.quality.tuner) on the grid's
+    p_add=0.3 DES cell and price the tuned engine against the strict
+    exact baseline (`pqe`) measured in the same process: the stated
+    rank-error budget is spent on lanes, and the speedup it buys is the
+    recorded, gated number (BENCH_pq.json quality.tuner_demo)."""
+    from benchmarks.pq_bench import bench_mix
+    from repro.quality.tuner import tune_lanes
+
+    cname = _grid_cell_name(SMOKE_GRID_WIDTH, 0.3, "des")
+    res = tune_lanes(width=SMOKE_GRID_WIDTH, p_add=0.3,
+                     budget=TUNER_BUDGET, key_dist="des", lanes_max=8)
+    tuned_us = min(
+        bench_mix("sharded", SMOKE_GRID_WIDTH, 0.3, ticks=20,
+                  key_dist="des", lanes=res.lanes,
+                  settle=40)["us_per_tick"]
+        for _ in range(3))
+    strict_us = results[cname]["pqe"]
+    return {
+        "cell": cname,
+        "metric": res.metric,
+        "budget": TUNER_BUDGET,
+        "lanes": res.lanes,
+        "rank_err_p99": res.value,
+        "strict_impl": "pqe",
+        "strict_us": strict_us,
+        "tuned_impl": f"sharded_L{res.lanes}",
+        "tuned_us": round(tuned_us, 2),
+        "speedup": round(strict_us / tuned_us, 2),
+    }
+
+
 def bench_smoke_json(out_path: str = "BENCH_pq.json",
                      merge_min: str = None) -> None:
     """CI perf-trajectory smoke: legacy width cells + a workload grid.
@@ -311,6 +357,17 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
       from the min-of-runs merge below and the gate on them catches
       real latency-distribution drift from policy/queue/fault-path
       edits, with widened per-quantile tolerances for the tails.
+
+    Every grid and dist cell also gets a per-impl QUALITY record
+    (rank_err_{p50,p99,max}, stale_{p50,p99,max}; DESIGN.md §12) in the
+    payload's top-level "quality" section: the rep-0 served stream is
+    replayed against the exact reference after the clock stops, and the
+    regression gate asserts rank_err_max <= relax_bound - rm_count per
+    cell — an ABSOLUTE, non-rebaselinable bound from the relaxation
+    theorem, so a semantics regression cannot be waved through as a
+    timing change.  The "tuner_demo" entry prices the quality budget:
+    the auto-tuner's lane choice must beat the strict exact baseline by
+    >= 1.2x at the stated budget.
 
     Each cell entry is the best of three runs: shared boxes showed up
     to 4x ambient inflation run-to-run, and the min is the standard
@@ -363,6 +420,7 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
          dict(lanes=8, preroute="adaptive", settle=40, window=20)),
     )
     hit_rates = {}
+    quality = {}
     for p_add, key_dist in SMOKE_GRID:
         cname = _grid_cell_name(SMOKE_GRID_WIDTH, p_add, key_dist)
         # reps are INTERLEAVED across variants (rep-major, not
@@ -372,27 +430,47 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         # each column in a different thermal/load period and the
         # min-of-reps comparison inherits that drift
         runs = {name: [] for name, _, _ in grid_variants}
-        for _ in range(4):
+        for rep in range(4):
             for name, impl, kw in grid_variants:
                 runs[name].append(bench_mix(impl, SMOKE_GRID_WIDTH, p_add,
                                             ticks=20, key_dist=key_dist,
-                                            **kw))
+                                            quality=rep == 0, **kw))
         cell = {}
+        qcell = {}
         for name, _, _ in grid_variants:
             best = min(runs[name], key=lambda r: r["us_per_tick"])
             cell[name] = round(best["us_per_tick"], 2)
+            qcell[name] = {k: runs[name][0][k] for k in QUALITY_KEYS}
             if name == "sharded_L8":
                 # hit rate from the SAME run the recorded time came from
                 hit_rates[cname] = round(best["preroute_hit_per_tick"], 1)
         results[cname] = cell
+        quality[cname] = qcell
         for name, us in cell.items():
             _emit(f"smoke_{name}_{cname}", us, "us_per_tick")
+        _emit(f"smoke_rank_err_{cname}", 0.0,
+              "|".join(f"{n}={qcell[n]['rank_err_p99']}"
+                       for n, _, _ in grid_variants))
+
+    # quality auto-tuner demo (DESIGN.md §12): widen lanes until the
+    # measured rank-error budget binds, then price the tuned engine
+    # against the strict exact baseline measured in the SAME process
+    # moments ago.  The regression gate holds speedup >= 1.2x
+    # (--quality-spend-min): a stated budget must BUY something.
+    tuner_demo = _tuner_demo(results)
+    _emit(f"smoke_tuner_demo_{tuner_demo['cell']}", tuner_demo["tuned_us"],
+          f"lanes={tuner_demo['lanes']}"
+          f"|rank_err_p99={tuner_demo['rank_err_p99']}"
+          f"<=budget={tuner_demo['budget']}"
+          f"|speedup_vs_{tuner_demo['strict_impl']}="
+          f"{tuner_demo['speedup']:.2f}x")
 
     # multi-device cells (subprocess, 8 forced host devices): the dist
     # engine vs the single-device reference on the same workload —
     # REQUIRED, so CI can never silently drop the dist trajectory
     dist = _run_dist_bench(required=True)
     dist_cells = dist["cells"]
+    quality.update(dist.get("quality", {}))
     for cname, cell in dist_cells.items():
         results[cname] = cell
         for name, us in cell.items():
@@ -435,6 +513,14 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
                            "pr2_pqe_w4096": 3447.88,
                            "pr2_sharded_L8_w4096": 1838.31},
         "preroute_hit_per_tick": hit_rates,
+        # rank-error / staleness observability (DESIGN.md §12): per-cell
+        # per-impl records from the rep-0 runs, kept OUTSIDE "results"
+        # so the timing gate's per-cell geomean normalization never
+        # ingests a quality number.  Always fresh: merge_min below does
+        # not touch this section (rank errors are deterministic given
+        # the seed, and the tuner demo's strict/tuned timings are a
+        # same-process pair that min-merging would split across runs).
+        "quality": {**quality, "tuner_demo": tuner_demo},
         "results": results,
     }
     if merge_min:

@@ -50,6 +50,14 @@ CELLS = {
                         burst_factor=4.0),
     "serve_chaos": dict(rho=0.9, pattern="poisson", ticks=120,
                         chaos="kill:1@10", spare_devices=1),
+    # the quality-relaxed mode (DESIGN.md §12): same workload as
+    # serve_steady, but deadline slack is spent on deferred, coalesced
+    # serve rounds — cheaper ticks when SLAs permit.  The run asserts
+    # the staleness budget held (defer runs <= max_defer) and that the
+    # mode actually skipped rounds; the recorded quantiles price the
+    # deferral in simulated ticks next to the strict twin.
+    "serve_relaxed": dict(rho=0.7, pattern="poisson", ticks=300,
+                          quality=dict(max_defer=3, defer_frac=0.5)),
 }
 
 
@@ -79,6 +87,14 @@ def run_cell(name: str) -> dict:
             f"{name}: scheduled kill never fired")
     if name == "serve_over":
         assert rep["shed"] > 0, "overload cell did not shed — not overload"
+    if "quality" in CELLS[name]:
+        budget = CELLS[name]["quality"]["max_defer"]
+        assert rep["max_defer_run"] <= budget, (
+            f"{name}: defer run {rep['max_defer_run']} broke the "
+            f"staleness budget {budget}")
+        assert rep["deferred_ticks"] > 0, (
+            f"{name}: quality-relaxed mode never deferred a round — "
+            "the cell is not exercising the mode")
     return rep
 
 
@@ -96,10 +112,16 @@ def main() -> None:
             "p999": round(rep["p999"], 2),
         }
         served_frac = rep["served"] / max(rep["arrivals"], 1)
+        extra = ""
+        if "quality" in CELLS[name]:
+            extra = (f"|deferred={rep['deferred_ticks']}"
+                     f"|max_defer_run={rep['max_defer_run']}"
+                     f"|coalesced={rep['coalesced_serves']}")
         print(f"{name},{cells[name]['p99']:.2f},"
               f"p50={cells[name]['p50']}|p999={cells[name]['p999']}"
               f"|served={served_frac:.2f}|shed={rep['shed']}"
-              f"|expired={rep['expired']}|max_depth={rep['max_depth']}")
+              f"|expired={rep['expired']}|max_depth={rep['max_depth']}"
+              f"{extra}")
     payload = {
         "meta": {
             "devices": N_DEVICES,

@@ -30,6 +30,26 @@ collapses, reopening every ``reprobe`` windows).  Hysteresis =
 two-threshold latches per signal + ``confirm`` consecutive windows +
 ``cooldown`` windows between switches, so an alternating workload
 cannot thrash the engine (tests/test_adaptive.py bounds switches).
+
+Usage — construction goes through the factory, and the engine drives
+like any other (the controller is invisible at the call site)::
+
+    from repro.core.factory import EngineSpec, make_engine
+    from repro.core.adaptive import ControllerConfig
+
+    eng = make_engine(EngineSpec(
+        engine="adaptive", width=4096, lanes=8, min_lanes=1,
+        controller=ControllerConfig(window=20, quality_budget=None)))
+    state = eng.init(seed=0)
+    state, res = eng.tick(state, keys, vals, mask, rm_count)
+    print(eng.controller_stats(state))   # EMAs, latches, switch count
+
+``ControllerConfig(quality_budget=...)`` (or
+``EngineSpec(quality_budget=...)``; the tighter wins) caps the lane
+ceiling the controller may unfold to, through the same analytic
+rank-error envelope as :func:`repro.core.factory.lanes_within_budget` —
+the controller then trades engines only within the quality budget
+(DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -102,10 +122,15 @@ class ControllerConfig:
     reprobe: int = 16  # windows between forced preroute re-probes
     freeze: bool = False  # forced-static: never switch anything
     engines: Tuple[str, ...] = ("pqe", "sharded")
+    # rank-error budget: caps the lane ceiling the controller may unfold
+    # to (factory.lanes_within_budget envelope; None = unbudgeted)
+    quality_budget: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.window < 1:
             raise ValueError("window must be >= 1")
+        if self.quality_budget is not None and self.quality_budget < 0:
+            raise ValueError("quality_budget must be >= 0")
         if not (0.0 < self.decay <= 1.0):
             raise ValueError("decay must be in (0, 1]")
         if self.confirm < 1 or self.cooldown < 0:
@@ -353,7 +378,19 @@ class AdaptiveEngine:
         self.ctl_cfg: ControllerConfig = spec.controller or ControllerConfig()
         self.base = factory.resolved_base(spec)
         self.max_lanes = spec.lanes
+        budgets = [
+            b
+            for b in (spec.quality_budget, self.ctl_cfg.quality_budget)
+            if b is not None
+        ]
+        if budgets:
+            # the tighter budget wins; the cap is the envelope inversion
+            # (DESIGN.md §12), so every plan the controller may pick —
+            # lanes <= max_lanes — already fits it
+            qspec = dataclasses.replace(spec, quality_budget=min(budgets))
+            self.max_lanes = factory.lanes_within_budget(qspec, spec.lanes)
         self.min_lanes = spec.min_lanes if spec.min_lanes is not None else spec.lanes
+        self.min_lanes = min(self.min_lanes, self.max_lanes)
         self.base_preroute = spec.preroute
         self._scfg_cache = {}
         self._chunk_cache = {}
@@ -379,12 +416,15 @@ class AdaptiveEngine:
         if key not in self._scfg_cache:
             full = (self.max_lanes, preroute)
             if lanes == self.max_lanes:
+                # min_lanes re-clamped: a quality_budget cap may have
+                # lowered max_lanes below the spec's fold floor
+                ml = self.spec.min_lanes
                 cfg = shq._sharded_cfg(
                     self.spec.width,
                     self.max_lanes,
                     base=self.base,
                     slack=self.spec.slack,
-                    min_lanes=self.spec.min_lanes,
+                    min_lanes=None if ml is None else min(ml, self.max_lanes),
                     preroute=preroute,
                 )
             else:

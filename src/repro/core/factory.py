@@ -20,10 +20,29 @@ constant.  This module is that API, the registry-based factory pattern
 Every engine satisfies the :class:`QueueEngine` protocol
 (``init / tick / tick_n / stats / resident / relax_bound / width``), so
 drivers — ``bench_mix``, the serving engine, the examples — never
-isinstance-dispatch on concrete classes.  The legacy constructors
-(``make_sharded_cfg``, ``make_dist_cfg``) survive one PR as deprecated
-aliases; tests/test_factory.py asserts no in-repo caller still uses
-them.
+isinstance-dispatch on concrete classes: a driver written once runs the
+paper's combined queue, the relaxed lanes, the device mesh, and the
+workload controller unchanged::
+
+    for spec in (EngineSpec(engine="pqe", width=64),
+                 EngineSpec(engine="sharded", width=64, lanes=4),
+                 EngineSpec(engine="adaptive", width=64, lanes=4)):
+        eng = make_engine(spec)
+        state = eng.init(seed=0)
+        state, res = eng.tick(state, keys, vals, mask, rm_count)
+        served = res.rm_keys[res.rm_served]       # within the c smallest
+        assert eng.relax_bound(8) >= 8            # c of the contract
+
+``EngineSpec(quality_budget=...)`` caps the relaxation the built engine
+may spend: the lane count is clamped to the widest L whose analytic
+rank-error envelope (``relax_bound(r) - r`` at r = W; DESIGN.md §12)
+fits the budget — budget 0 forces an exact engine.  The envelope is
+adversarial and nearly flat in L; for measured, graded tuning use
+:func:`repro.quality.tuner.tune_lanes`.
+
+The legacy constructors (``make_sharded_cfg``, ``make_dist_cfg``)
+survive one PR as deprecated aliases; tests/test_factory.py asserts no
+in-repo caller still uses them.
 """
 
 from __future__ import annotations
@@ -115,6 +134,11 @@ class EngineSpec:
     # repro.core.adaptive.ControllerConfig or None for defaults
     controller: Any = None
 
+    # rank-error budget (sharded / adaptive): clamp lanes so the
+    # analytic envelope relax_bound(W) - W fits it (None = unbudgeted;
+    # see lanes_within_budget and DESIGN.md §12)
+    quality_budget: Optional[float] = None
+
 
 def default_base(width: int) -> PQConfig:
     """A width-`width` single-queue base config (the bench geometry)."""
@@ -139,6 +163,38 @@ def resolved_base(spec: EngineSpec) -> PQConfig:
         k: getattr(spec, k) for k in _DETACH_KNOBS if getattr(spec, k) is not None
     }
     return dataclasses.replace(base, **over) if over else base
+
+
+def lanes_within_budget(spec: EngineSpec, lanes: int) -> int:
+    """Widest lane count <= ``lanes`` whose analytic rank-error envelope
+    fits ``spec.quality_budget`` (identity when the spec is unbudgeted).
+
+    The envelope is ``relax_bound(cfg_L, W) - W`` — the adversarial
+    worst-case displacement of any served key beyond the exact prefix
+    (DESIGN.md §12), evaluated at the widest per-tick request r = W.
+    L = 1 has envelope 0 (exact), so the walk always terminates.  This
+    is the ENVELOPE inversion: nearly binary in L for the bench geometry
+    (quotas size ``L * lane.a_max ~= W``, so every L >= 2 costs about
+    ``W + 2W``); :func:`repro.quality.tuner.tune_lanes` is the measured,
+    graded instrument on an actual workload.
+    """
+    if spec.quality_budget is None:
+        return lanes
+    budget = float(spec.quality_budget)
+    base = resolved_base(spec)
+    ml = spec.min_lanes
+    for ln in range(lanes, 0, -1):
+        cfg = shq._sharded_cfg(
+            spec.width,
+            ln,
+            base=base,
+            slack=spec.slack,
+            min_lanes=None if ml is None else min(ml, ln),
+            preroute=spec.preroute,
+        )
+        if shq.relax_bound(cfg, spec.width) - spec.width <= budget:
+            return ln
+    return 1
 
 
 # ---------------------------------------------------------------------------
@@ -309,12 +365,14 @@ def _build_pqe(spec: EngineSpec) -> PQEngine:
 
 @register("sharded")
 def _build_sharded(spec: EngineSpec) -> ShardedEngine:
+    lanes = lanes_within_budget(spec, spec.lanes)
+    ml = spec.min_lanes
     cfg = shq._sharded_cfg(
         spec.width,
-        spec.lanes,
+        lanes,
         base=resolved_base(spec),
         slack=spec.slack,
-        min_lanes=spec.min_lanes,
+        min_lanes=None if ml is None else min(ml, lanes),
         preroute=spec.preroute,
     )
     return ShardedEngine(cfg)

@@ -900,8 +900,15 @@ def relax_bound(cfg: ShardedPQConfig, rm_count: int) -> int:
     probabilistic in the router's balance, not adversarial-deterministic;
     the constant 2 gives the measured worst case on the bench workloads
     (~19L displacement at W=64) a ~2x margin.
+
+    L = 1 is exact (c = r): the single lane holds the whole union, its
+    head IS the union minimum, and a pre-route-eliminated add is <= that
+    head — so every served key is a true prefix minimum (the quality
+    harness pins rank error identically 0 there; tests/test_quality.py).
     """
-    r = rm_count
+    r = int(rm_count)
+    if cfg.n_lanes == 1:
+        return r
     return (r + cfg.n_lanes * (-(-r // cfg.n_lanes))
             + 2 * cfg.n_lanes * cfg.lane.a_max)
 

@@ -1,0 +1,16 @@
+"""Relaxation-quality observability (DESIGN.md §12).
+
+``harness`` measures what the c-relaxed contract only bounds — the
+rank-error and staleness distributions of any engine's served stream,
+replayed against the exact reference; ``tuner`` spends the measurement,
+widening the lane count until a rank-error budget binds.  The analytic
+(envelope) inversion of the same budget lives in
+:func:`repro.core.factory.lanes_within_budget`, and the serving-side
+spend (deadline slack -> deferred serve rounds) in
+:mod:`repro.serving.scheduler`.
+"""
+
+from repro.quality.harness import (  # noqa: F401
+    RankErrorMeter, SUMMARY_KEYS, measure_engine, replay)
+from repro.quality.tuner import (  # noqa: F401
+    TuneResult, probe_stream, tune_lanes, warm_keys)

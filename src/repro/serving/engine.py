@@ -49,7 +49,8 @@ from repro.core.config import EMPTY_VAL
 from repro.ft.elastic import ElasticDistQueue
 from repro.serving.arrivals import ArrivalProcess, Request
 from repro.serving.scheduler import (
-    EXPIRED, SERVED, SHED, AdmissionController, OverloadPolicy, ShedEvent)
+    EXPIRED, SERVED, SHED, AdmissionController, OverloadPolicy,
+    QualityPolicy, ServeDeferrer, ShedEvent)
 
 _EPS = 1e-9
 
@@ -66,13 +67,18 @@ class RequestEngine:
 
     def __init__(self, queue: ElasticDistQueue, policy: OverloadPolicy,
                  arrivals: Optional[ArrivalProcess] = None,
-                 n_slots: Optional[int] = None):
+                 n_slots: Optional[int] = None,
+                 quality: Optional[QualityPolicy] = None):
         self.queue = queue
         self.policy = policy
         self.arrivals = arrivals
         self.n_slots = int(n_slots if n_slots is not None
                            else round(policy.serve_rate))
         self.admission = AdmissionController(policy)
+        # quality-relaxed mode: deadline slack -> deferred serve rounds
+        # (None = strict: serve every tick; repro.serving.scheduler)
+        self.deferrer = ServeDeferrer(quality) if quality is not None \
+            else None
         self.clock = queue.clock
         if arrivals is not None and arrivals.clock is not self.clock:
             raise ValueError(
@@ -175,9 +181,16 @@ class RequestEngine:
             ak[i] = req.deadline
             av[i] = req.rid
             mask[i] = True
+        if self.deferrer is not None:
+            rm_now = min(self.deferrer.quota(
+                np.asarray(self._deadlines, np.float64), now,
+                self.admission.effective_rate, self.policy.tick_dt,
+                self.n_slots, self.depth), w)
+        else:
+            rm_now = min(self.n_slots, self.depth)
         res, info = self.queue.step(
             jnp.asarray(ak), jnp.asarray(av), jnp.asarray(mask),
-            jnp.asarray(min(self.n_slots, self.depth), jnp.int32))
+            jnp.asarray(rm_now, jnp.int32))
         self.n_ticks += 1
         now_served = self.clock.now   # post-tick (includes retry burns)
 
@@ -241,7 +254,10 @@ class RequestEngine:
         lat = np.asarray(self.latencies, np.float64)
         q = (lambda p: float(np.percentile(lat, p))) if len(lat) else \
             (lambda p: float("nan"))
+        quality = (self.deferrer.report() if self.deferrer is not None
+                   else {})
         return {
+            **quality,
             "arrivals": self.n_arrivals,
             "admitted": self.n_admitted,
             "served": self.outcomes[SERVED],

@@ -99,6 +99,88 @@ class ShedEvent:
     time: float
 
 
+@dataclasses.dataclass(frozen=True)
+class QualityPolicy:
+    """Quality-relaxed serving: measured deadline slack becomes a
+    staleness budget spent on SKIPPED serve rounds (DESIGN.md §12).
+
+    A serve round costs a full device tick whatever its batch size, so
+    when every in-flight deadline has slack, deferring the round and
+    serving a coalesced batch later buys the same outcomes with fewer
+    queue rounds — the serving-side spend of the relaxation-quality
+    axis: each deferred round adds exactly one tick of staleness to the
+    frontier request, which is rank error priced in ticks (up to one
+    arrival wave's worth of later-deadline requests may now be served
+    ahead of it in the coalesced batch).
+
+    ``defer_frac`` converts measured slack into budget (a round may be
+    deferred only while the current defer streak stays under
+    ``defer_frac * min_slack_ticks``); ``max_defer`` hard-caps the
+    streak regardless of slack, bounding worst-case added staleness.
+    Slack is measured pessimistically — per in-flight request, deadline
+    distance minus the full-rate backlog-clearing time ahead of it — so
+    a deferral never makes an admitted deadline infeasible by its own
+    estimate; what it can still do is widen the EDF inversion window
+    (the honest caveat in DESIGN.md §12).
+    """
+
+    max_defer: int = 4
+    defer_frac: float = 0.5
+
+    def __post_init__(self) -> None:
+        if self.max_defer < 0:
+            raise ValueError("max_defer must be >= 0")
+        if not (0.0 <= self.defer_frac <= 1.0):
+            raise ValueError("defer_frac must be in [0, 1]")
+
+
+class ServeDeferrer:
+    """Stateful defer/coalesce decision for :class:`QualityPolicy`.
+
+    ``quota(...)`` returns this tick's remove quota: 0 while deferring,
+    or a coalesced batch (up to ``n_slots * (streak + 1)``) when the
+    budget is spent or absent.  Pure host math over the engine's sorted
+    in-flight deadlines; the engine owns ground truth.
+    """
+
+    def __init__(self, policy: QualityPolicy):
+        self.policy = policy
+        self.streak = 0           # consecutive deferred rounds
+        self.n_deferred = 0       # total deferred serve rounds
+        self.n_coalesced = 0      # serves dispatched in coalesced batches
+        self.max_streak = 0       # worst defer run (budget-held witness)
+
+    def quota(self, deadlines: np.ndarray, now: float, rate: float,
+              tick_dt: float, n_slots: int, depth: int) -> int:
+        """Decide this round.  ``deadlines`` sorted ascending (the
+        engine's in-flight view); ``rate`` the effective serve rate."""
+        if depth == 0:
+            self.streak = 0
+            return 0
+        ranks = np.arange(len(deadlines), dtype=np.float64)
+        # per-request slack in ticks if serving resumed at full rate now
+        slack = (deadlines - now) / tick_dt - np.ceil((ranks + 1.0) / rate)
+        budget = min(self.policy.max_defer,
+                     int(self.policy.defer_frac * float(slack.min())))
+        if self.streak < budget:
+            self.streak += 1
+            self.n_deferred += 1
+            self.max_streak = max(self.max_streak, self.streak)
+            return 0
+        q = min(n_slots * (self.streak + 1), depth)
+        if self.streak:
+            self.n_coalesced += q
+        self.streak = 0
+        return q
+
+    def report(self) -> Dict[str, int]:
+        return {
+            "deferred_ticks": self.n_deferred,
+            "max_defer_run": self.max_streak,
+            "coalesced_serves": self.n_coalesced,
+        }
+
+
 class AdmissionController:
     """Stateful admission: depth cap + EDF feasibility + bounded retry.
 

@@ -31,7 +31,7 @@ from repro.ft.inject import FaultSchedule
 from repro.serving.arrivals import (
     ArrivalProcess, BurstyArrivals, DiurnalArrivals, PoissonArrivals)
 from repro.serving.engine import RequestEngine
-from repro.serving.scheduler import SHED, OverloadPolicy
+from repro.serving.scheduler import SHED, OverloadPolicy, QualityPolicy
 
 _PATTERNS = {"poisson": PoissonArrivals, "bursty": BurstyArrivals,
              "diurnal": DiurnalArrivals}
@@ -45,7 +45,9 @@ def build_engine(*, n_devices: int = 1, lanes_per_device: int = 4,
                  tick_dt: float = 1.0, slack: float = 1.0,
                  sla_mean: float = 50.0, sla_min: float = 20.0,
                  p_urgent: float = 0.0, max_retries: int = 2,
-                 preroute: str = "adaptive", **arrival_kw) -> RequestEngine:
+                 preroute: str = "adaptive",
+                 quality: Optional[dict] = None,
+                 **arrival_kw) -> RequestEngine:
     """Assemble queue -> elastic controller -> engine at utilization
     ``rho`` (arrival rate = rho * n_slots / tick_dt).
 
@@ -53,7 +55,11 @@ def build_engine(*, n_devices: int = 1, lanes_per_device: int = 4,
     (n_lanes * seq_cap), far below where the router could drop —
     admission is meant to bind FIRST.  Pass ``schedule`` (or build one
     from ``PQ_CHAOS`` via :func:`repro.ft.inject.parse_chaos`) for chaos
-    runs; ``spare_devices`` must then cover the kills.
+    runs; ``spare_devices`` must then cover the kills.  ``quality``
+    (a :class:`~repro.serving.scheduler.QualityPolicy` or its kwargs
+    dict, e.g. ``dict(max_defer=3, defer_frac=0.5)``) enables the
+    quality-relaxed serving mode: deadline slack is spent on deferred,
+    coalesced serve rounds (DESIGN.md §12).
     """
     if pattern not in _PATTERNS:
         raise ValueError(f"unknown arrival pattern {pattern!r} "
@@ -77,7 +83,10 @@ def build_engine(*, n_devices: int = 1, lanes_per_device: int = 4,
         rho * n_slots / tick_dt, clock=ctl.clock, tick_dt=tick_dt,
         seed=seed, sla_mean=sla_mean, sla_min=sla_min, p_urgent=p_urgent,
         **arrival_kw)
-    return RequestEngine(ctl, policy, arrivals=arrivals, n_slots=n_slots)
+    if quality is not None and not isinstance(quality, QualityPolicy):
+        quality = QualityPolicy(**quality)
+    return RequestEngine(ctl, policy, arrivals=arrivals, n_slots=n_slots,
+                         quality=quality)
 
 
 def run_sla(engine: RequestEngine, n_ticks: int, *,
