@@ -50,7 +50,7 @@ def make_cfg(width: int) -> PQConfig:
 
 def make_impl_engine(impl: str, width: int, *, lanes: int = DEFAULT_LANES,
                      preroute: str = "adaptive", min_lanes: int = None,
-                     window: int = None):
+                     window: int = None, backend=None):
     """Resolve one bench impl to its engine via the unified factory.
 
     `lanes`/`preroute`/`min_lanes` only affect the lane-based engines
@@ -58,14 +58,18 @@ def make_impl_engine(impl: str, width: int, *, lanes: int = DEFAULT_LANES,
     pre-route elimination gate (adaptive|on|off) — the bench grid
     measures "off" as the disabled comparison point.  `window` sets the
     adaptive controller's decision cadence in ticks (its deployment
-    knob: decisions per window cost one host round-trip)."""
+    knob: decisions per window cost one host round-trip).  `backend`
+    is the spec-level kernel backend (jnp | pallas | pallas_interpret |
+    auto); None keeps the config default ("auto", honoring PQ_BACKEND).
+    """
     controller = None
     if window is not None:
         from repro.core.adaptive import ControllerConfig
         controller = ControllerConfig(window=window)
     return make_engine(EngineSpec(
         engine=impl, width=width, base=make_cfg(width), lanes=lanes,
-        min_lanes=min_lanes, preroute=preroute, controller=controller))
+        min_lanes=min_lanes, preroute=preroute, controller=controller,
+        backend=backend))
 
 
 def gen_mix_batches(width: int, n_add: int, n_rm: int, ticks: int, rng,
@@ -124,12 +128,17 @@ def _stack(batches):
             jnp.stack([b[2] for b in batches]))
 
 
+# variant-key -> HloStats for bench_mix(roofline=True); see capture site.
+_ROOFLINE_STATS = {}
+
+
 def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
               seed: int = 0, key_dist: str = "uniform",
               lanes: int = DEFAULT_LANES, preroute: str = "adaptive",
               min_lanes: int = None, settle: int = 0,
               window: int = None, scan: bool = True,
-              quality: bool = False) -> Dict[str, float]:
+              quality: bool = False,
+              roofline: bool = False, backend=None) -> Dict[str, float]:
     """Throughput of one implementation at one width and add-fraction.
 
     key_dist:
@@ -157,10 +166,17 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
     settle ticks feed the reference without entering the aggregates, so
     the quality window and the timing window coincide.
 
+    `roofline=True` (scan path only) additionally compiles the exact
+    timed `tick_n` program, analyzes its optimized HLO, and attaches an
+    achieved-vs-peak record (repro.roofline.measure) under
+    out["roofline"] — flops / HBM-proxy bytes vs the TPU v5e reference
+    roof, with the actual runtime device recorded honestly.
+
     Returns {us_per_tick, mops_per_s, ...stats}.
     """
     eng = make_impl_engine(impl, width, lanes=lanes, preroute=preroute,
-                           min_lanes=min_lanes, window=window)
+                           min_lanes=min_lanes, window=window,
+                           backend=backend)
     rng = np.random.default_rng(seed)
     state, warm_keys = _warm(eng, rng)
 
@@ -236,6 +252,26 @@ def bench_mix(impl: str, width: int, p_add: float, *, ticks: int = 50,
         "us_per_tick": dt / ticks * 1e6,
         "mops_per_s": width * ticks / dt / 1e6,
     }
+    if roofline and use_scan and eng.kind != "adaptive":
+        # achieved-vs-peak record for this cell's timed run.  The scanned
+        # tick program only depends on shapes and engine config — not on
+        # p_add/key_dist — so the (expensive) HLO analysis is cached per
+        # variant and only the wall time is folded in per cell.  Lowering
+        # reads avals only (post-run state is fine, donation never fires).
+        # The adaptive engine is excluded: its tick_n is a HOST-side
+        # chunk driver (one host pull per decision window, DESIGN.md
+        # §11), not a single jit program — there is no one compiled
+        # module whose flop/byte counts describe the run.
+        from repro.roofline import measure
+        from repro.roofline.hlo_stats import analyze
+        vkey = (impl, width, lanes, preroute, min_lanes, window, ticks,
+                backend)
+        st = _ROOFLINE_STATS.get(vkey)
+        if st is None:
+            st = analyze(measure.compiled_text_of(
+                eng.tick_n, state, stak, stav, stam, rms))
+            _ROOFLINE_STATS[vkey] = st
+        out["roofline"] = measure.record_from_stats(st, dt, n_ticks=ticks)
     if quality:
         if use_scan:
             q_res.append((np.asarray(res.rm_keys),

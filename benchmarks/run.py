@@ -128,9 +128,12 @@ def bench_kernels() -> None:
     v = jnp.asarray(rng.integers(0, 1 << 20, (rows, n)), jnp.int32)
     f = jnp.zeros((rows, n), jnp.int32)
 
+    pallas_bk = ops.resolve_backend("pallas")
+    jnp_bk = ops.resolve_backend("jnp")
     for name, fn in (
-        ("bitonic_pallas", lambda: ops.sort_kvf(k, v, f, backend="pallas")),
-        ("sort_jnp", lambda: ops.sort_kvf(k, v, f, backend="jnp")),
+        ("bitonic_pallas",
+         lambda: ops.sort_kvf(k, v, f, backend=pallas_bk)),
+        ("sort_jnp", lambda: ops.sort_kvf(k, v, f, backend=jnp_bk)),
     ):
         out = fn()
         jax.block_until_ready(out)
@@ -146,7 +149,7 @@ def bench_kernels() -> None:
     av = jnp.arange(1024, dtype=jnp.int32)
     bv = jnp.arange(256, dtype=jnp.int32)
     z1, z2 = jnp.zeros(1024, jnp.int32), jnp.zeros(256, jnp.int32)
-    for name, be in (("merge_pallas", "pallas"), ("merge_jnp", "jnp")):
+    for name, be in (("merge_pallas", pallas_bk), ("merge_jnp", jnp_bk)):
         fn = lambda: ops.merge_sorted(a, av, z1, b, bv, z2, backend=be)  # noqa
         out = fn()
         jax.block_until_ready(out)
@@ -158,7 +161,7 @@ def bench_kernels() -> None:
               (time.perf_counter() - t0) / 5 * 1e6, "merged")
 
     keys = jnp.asarray(rng.uniform(0, 1e4, 4096), jnp.float32)
-    for name, be in (("radix_pallas", "pallas"), ("select_jnp", "jnp")):
+    for name, be in (("radix_pallas", pallas_bk), ("select_jnp", jnp_bk)):
         fn = lambda: ops.select_threshold(keys, 256, backend=be)  # noqa
         out = fn()
         jax.block_until_ready(out)
@@ -421,6 +424,7 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
     )
     hit_rates = {}
     quality = {}
+    roofline = {}
     for p_add, key_dist in SMOKE_GRID:
         cname = _grid_cell_name(SMOKE_GRID_WIDTH, p_add, key_dist)
         # reps are INTERLEAVED across variants (rep-major, not
@@ -432,20 +436,29 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         runs = {name: [] for name, _, _ in grid_variants}
         for rep in range(4):
             for name, impl, kw in grid_variants:
+                # roofline on every rep is near-free: the HLO analysis is
+                # cached per variant (pq_bench._ROOFLINE_STATS), only the
+                # rep's wall time is folded in — so the recorded record
+                # below can come from the SAME run as the recorded time
                 runs[name].append(bench_mix(impl, SMOKE_GRID_WIDTH, p_add,
                                             ticks=20, key_dist=key_dist,
-                                            quality=rep == 0, **kw))
+                                            quality=rep == 0, roofline=True,
+                                            **kw))
         cell = {}
         qcell = {}
+        rcell = {}
         for name, _, _ in grid_variants:
             best = min(runs[name], key=lambda r: r["us_per_tick"])
             cell[name] = round(best["us_per_tick"], 2)
             qcell[name] = {k: runs[name][0][k] for k in QUALITY_KEYS}
+            if "roofline" in best:
+                rcell[name] = best["roofline"]
             if name == "sharded_L8":
                 # hit rate from the SAME run the recorded time came from
                 hit_rates[cname] = round(best["preroute_hit_per_tick"], 1)
         results[cname] = cell
         quality[cname] = qcell
+        roofline[cname] = rcell
         for name, us in cell.items():
             _emit(f"smoke_{name}_{cname}", us, "us_per_tick")
         _emit(f"smoke_rank_err_{cname}", 0.0,
@@ -521,6 +534,14 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
         # the seed, and the tuner demo's strict/tuned timings are a
         # same-process pair that min-merging would split across runs).
         "quality": {**quality, "tuner_demo": tuner_demo},
+        # roofline observability (DESIGN.md §13): per-cell per-impl
+        # achieved-vs-peak records from the SAME run each recorded time
+        # came from (repro.roofline.measure vs the TPU v5e reference
+        # roof; "device" records where the bench actually ran).  Kept
+        # OUTSIDE "results" like "quality" so the timing gate never
+        # ingests one, and deliberately NOT min-merged: the record must
+        # stay paired with this run's machine and wall time.
+        "roofline": roofline,
         "results": results,
     }
     if merge_min:
@@ -573,9 +594,43 @@ def bench_smoke_json(out_path: str = "BENCH_pq.json",
     print(f"# wrote {out_path}")
 
 
+def bench_accel() -> None:
+    """Optional accelerator leg (CI job bench-accel): the fused lane
+    megakernel under a REAL pallas backend (Mosaic on TPU, Triton on
+    GPU) priced against the jnp path on the same chip, roofline records
+    attached.  Skips CLEANLY — one line, exit 0 — when the runtime only
+    has CPU, so the job can be enabled on any runner pool without going
+    red (on CPU the megakernel's pallas path is interpret-mode anyway,
+    a correctness tool, not a perf claim; DESIGN.md §13)."""
+    import jax
+    from benchmarks.pq_bench import bench_mix
+    dev = jax.default_backend()
+    if dev == "cpu":
+        print("# accel bench: jax.default_backend()=cpu — no accelerator, "
+              "skipping cleanly")
+        return
+    for impl, kw in (("pqe", {}), ("sharded", dict(lanes=8))):
+        for bk in ("jnp", "pallas"):
+            r = bench_mix(impl, SMOKE_GRID_WIDTH, 0.3, ticks=20,
+                          key_dist="des", settle=40, roofline=True,
+                          backend=bk, **kw)
+            _emit(f"accel_{dev}_{impl}_{bk}", r["us_per_tick"],
+                  "us_per_tick")
+            rl = r.get("roofline")
+            if rl:
+                _emit(f"accel_{dev}_{impl}_{bk}_roofline", 0.0,
+                      f"{rl['bound']}_bound"
+                      f"|peak_bw={rl['frac_peak_bw']:.2%}"
+                      f"|peak_flops={rl['frac_peak_flops']:.2%}"
+                      f"|of_{rl['peak_ref']}")
+
+
 def main() -> None:
     import sys
     print("name,us_per_call,derived")
+    if "--accel" in sys.argv:
+        bench_accel()
+        return
     if "--smoke" in sys.argv:
         out = "BENCH_pq.json"
         if "--out" in sys.argv:

@@ -61,6 +61,31 @@ def main() -> None:
     print(f" moveHead / chopHead events  : {int(s.n_movehead)}"
           f" / {int(s.n_chophead)}")
 
+    print("\n== kernel backend: config, not per-call (DESIGN.md §13) ==")
+    # backend selection rides the spec and resolves ONCE at engine
+    # construction — "jnp" (reference), "pallas" (fused lanes-in-grid
+    # megakernel; Mosaic on TPU, interpret elsewhere), "pallas_interpret"
+    # (the same kernel, forced interpreter execution — the off-TPU
+    # validation mode used here), or "auto" (pallas on TPU, else jnp;
+    # the PQ_BACKEND env var overrides).  Same stream, bit-identical
+    # serves on any backend — that contract is CI-pinned
+    # (tests/test_lane_megakernel.py).
+    fused = make_engine(EngineSpec(engine="pqe", width=64, base=base,
+                                   backend="pallas_interpret"))
+    print(f" resolved at construction: {fused.cfg.backend}")
+    fstate = fused.init(seed=0)
+    fkeys = rng.uniform(0, 1000, 64).astype(np.float32)
+    fstate, _ = fused.tick(fstate, jnp.asarray(fkeys),
+                           jnp.arange(64, dtype=jnp.int32),
+                           jnp.ones((64,), bool), jnp.asarray(0))
+    fstate, fres = fused.tick(fstate,
+                              jnp.full((64,), jnp.inf, jnp.float32),
+                              jnp.zeros((64,), jnp.int32),
+                              jnp.zeros((64,), bool), jnp.asarray(8))
+    fserved = np.sort(np.asarray(fres.rm_keys)[np.asarray(fres.rm_served)])
+    assert np.array_equal(fserved, np.sort(fkeys)[:8])
+    print(f" megakernel served the exact 8 smallest: {fserved.round(1)}")
+
     print("\n== relaxation quality: rank error vs the exact reference ==")
     # the meter replays each engine's own (adds, served) stream against
     # the instantaneous exact union (DESIGN.md §12): pqe is exact, so

@@ -18,7 +18,9 @@ are static so that every tick is a single fixed-shape XLA program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Tuple, Union
+
+from repro.kernels.ops import KernelBackend, resolve_backend
 
 # Sentinel returned for a removeMin() on an empty queue. The paper returns
 # MaxInt (Alg. 3 line 2); we return an +inf key and EMPTY_VAL payload.
@@ -36,10 +38,13 @@ class PQConfig:
     a_max: int = 256           # max add() ops per tick
     r_max: int = 256           # max removeMin() ops per tick
 
-    # --- kernel backend: "jnp" (XLA-native) or "pallas" (Mosaic kernels;
-    # interpret=True off-TPU). The tick's sort and merge hot paths dispatch
-    # through repro.kernels.ops on "pallas".
-    backend: str = "jnp"
+    # --- kernel backend: "jnp" | "pallas" | "pallas_interpret" | "auto",
+    # resolved ONCE here (construction time, never inside jit tracing) to a
+    # frozen repro.kernels.ops.KernelBackend that the tick's sort / merge /
+    # extract hot paths — and the sharded lane-tick megakernel — dispatch
+    # on.  The default "jnp" resolves without touching the JAX runtime, so
+    # module-level configs keep the import-then-set-XLA-flags contract.
+    backend: Union[KernelBackend, str] = "jnp"
 
     # --- sequential part ---------------------------------------------------
     seq_cap: int = 4096        # capacity of the sequential (head) part
@@ -90,6 +95,12 @@ class PQConfig:
         return self.par_cap + self.seq_cap
 
     def __post_init__(self) -> None:
+        # canonicalize the backend spelling eagerly: validation + the
+        # jax.default_backend() probe (for "pallas"/"auto") happen here,
+        # outside any trace, so the compiled tick's cache key carries the
+        # resolved choice (dataclasses.replace re-runs this; a resolved
+        # KernelBackend passes through unchanged)
+        object.__setattr__(self, "backend", resolve_backend(self.backend))
         if self.a_max <= 0 or self.r_max <= 0:
             raise ValueError("a_max and r_max must be positive")
         if self.seq_cap < self.a_max + self.r_max + 2:

@@ -110,6 +110,13 @@ class EngineSpec:
     width: int = 256  # op-batch width W per tick
     base: Optional[PQConfig] = None  # None -> default_base(width)
 
+    # kernel backend: "jnp" | "pallas" | "pallas_interpret" | "auto" (or a
+    # resolved repro.kernels.ops.KernelBackend); validated + resolved ONCE
+    # in resolved_base(), so dispatch is part of the engine's config — the
+    # compiled tick's cache key — never a per-call string or an ambient
+    # jax.default_backend() probe.  None keeps the base config's backend.
+    backend: Optional[Any] = None
+
     # lane geometry (sharded / dist / elastic / adaptive); min_lanes is
     # fold headroom — quotas sized so the queue can fold down to it
     lanes: int = 4
@@ -157,11 +164,22 @@ def default_base(width: int) -> PQConfig:
 
 
 def resolved_base(spec: EngineSpec) -> PQConfig:
-    """The spec's base config with its detach knobs applied."""
+    """The spec's base config with its detach knobs and backend applied.
+
+    ``spec.backend`` is validated here (``jnp | pallas | pallas_interpret
+    | auto`` or an already-resolved ``KernelBackend``) and resolved
+    eagerly via :func:`repro.kernels.ops.resolve_backend` — every engine
+    builder funnels through this function, so backend selection flows
+    from the spec into ``PQConfig.backend`` exactly once, at construction.
+    """
+    from repro.kernels.ops import resolve_backend
+
     base = spec.base if spec.base is not None else default_base(spec.width)
     over = {
         k: getattr(spec, k) for k in _DETACH_KNOBS if getattr(spec, k) is not None
     }
+    if spec.backend is not None:
+        over["backend"] = resolve_backend(spec.backend)
     return dataclasses.replace(base, **over) if over else base
 
 

@@ -942,18 +942,40 @@ def _tick_impl(cfg: PQConfig, state: PQState, add_keys, add_vals,
     (rebalance+moveHead fused, rebalance-only, moveHead-only, chopHead)
     -> finish.  The combine/scatter passes run inline here (a lone queue
     nearly always needs them); each repair runs under its own lax.cond,
-    so a tick pays only the rare paths it actually needs."""
-    mid = _tick_head(cfg, state, add_keys, add_vals, add_mask, rm_count)
-    mid = _pass_combine(cfg, mid)
-    mid = _pass_scatter(cfg, mid)
-    mid = _tick_preds(cfg, mid)
-    p = mid.pending
-    for pred, repair in (
-        (p.need_rebal & p.need_move, _repair_rebal_move),
-        (p.need_rebal & ~p.need_move, _repair_rebalance),
-        (p.need_move & ~p.need_rebal, _repair_move),
-        (p.need_chop, _repair_chop),
-    ):
+    so a tick pays only the rare paths it actually needs.
+
+    With a pallas ``cfg.backend`` the hot pipeline (head through the
+    moveHead repair) runs as the L=1 case of the lanes-in-grid
+    megakernel (kernels/lane_tick.py) — same passes, same bits, one
+    kernel launch — and only the rare repairs keep their conds here."""
+    if cfg.backend.is_pallas:
+        from repro.kernels import lane_tick as _lt   # lazy: import cycle
+        mid = _lt.fused_tick_mid(
+            cfg, jax.tree.map(lambda x: x[None], state),
+            add_keys[None], add_vals[None], add_mask[None],
+            jnp.asarray(rm_count, _I32)[None])
+        mid = jax.tree.map(lambda x: x[0], mid)
+        repairs = (
+            (mid.pending.need_rebal & mid.pending.need_move,
+             _repair_rebal_move),
+            (mid.pending.need_rebal & ~mid.pending.need_move,
+             _repair_rebalance),
+            (mid.pending.need_chop, _repair_chop),
+        )
+    else:
+        mid = _tick_head(cfg, state, add_keys, add_vals, add_mask,
+                         rm_count)
+        mid = _pass_combine(cfg, mid)
+        mid = _pass_scatter(cfg, mid)
+        mid = _tick_preds(cfg, mid)
+        p = mid.pending
+        repairs = (
+            (p.need_rebal & p.need_move, _repair_rebal_move),
+            (p.need_rebal & ~p.need_move, _repair_rebalance),
+            (p.need_move & ~p.need_rebal, _repair_move),
+            (p.need_chop, _repair_chop),
+        )
+    for pred, repair in repairs:
         mid = jax.lax.cond(pred, functools.partial(repair, cfg),
                            lambda m: m, mid)
     return _tick_finish(cfg, mid)

@@ -607,7 +607,18 @@ def _lanes_tick(lane_cfg, lanes: pqueue.PQState, lk, lv, lm, grants,
     while a tick with no overflow/shortfall/quiet lane pays none of the
     flatten/extract/redistribute work ``vmap``'s cond→select lowering
     used to force on every lane every tick.
+
+    Backend dispatch (the engine-level ``backend`` config): when
+    ``lane_cfg.backend`` resolved to pallas, the whole hot pipeline —
+    head, combine, scatter, predicates, AND the common moveHead repair —
+    runs as ONE lanes-in-grid megakernel (kernels/lane_tick.py) instead
+    of the vmap + hoisted-cond chain below; only the rare repairs and
+    the finish stay out here.  Bit-identical either way (the megakernel
+    equivalence leg of tests/test_lane_megakernel.py).
     """
+    if lane_cfg.backend.is_pallas:
+        return _lanes_tick_fused(lane_cfg, lanes, lk, lv, lm, grants,
+                                 adds_sorted=adds_sorted)
     mid = jax.vmap(
         lambda s, k, v, m, r: pqueue._tick_head(
             lane_cfg, s, k, v, m, r, adds_sorted=adds_sorted),
@@ -654,6 +665,30 @@ def _lanes_tick(lane_cfg, lanes: pqueue.PQState, lk, lv, lm, grants,
     state, res = pqueue._tick_finish(lane_cfg, mid)
     # per-lane served counts from the carry's counters (the removed
     # stream is a dense prefix per lane) — no array reduction needed
+    n_lane = mid.pending.move_off + mid.n_rm_par
+    return state, res, n_lane
+
+
+def _lanes_tick_fused(lane_cfg, lanes, lk, lv, lm, grants, *,
+                      adds_sorted: bool):
+    """Pallas-backend twin of :func:`_lanes_tick`: the hot pipeline
+    (including the moveHead repair, per-lane selected) is one
+    lanes-in-grid ``pallas_call``; the three rare repairs keep exactly
+    the jnp path's any-lane ``lax.cond`` hoists, and lanes a firing
+    repair did not select keep their state bit-for-bit."""
+    from repro.kernels import lane_tick as _lt   # lazy: import cycle
+    mid = _lt.fused_tick_mid(lane_cfg, lanes, lk, lv, lm, grants,
+                             adds_sorted=adds_sorted)
+    p = mid.pending
+    for pred, repair in (
+        (p.need_rebal & p.need_move, pqueue._repair_rebal_move),
+        (p.need_rebal & ~p.need_move, pqueue._repair_rebalance),
+        (p.need_chop, pqueue._repair_chop),
+    ):
+        mid = jax.lax.cond(jnp.any(pred),
+                           functools.partial(repair, lane_cfg),
+                           lambda m: m, mid)
+    state, res = pqueue._tick_finish(lane_cfg, mid)
     n_lane = mid.pending.move_off + mid.n_rm_par
     return state, res, n_lane
 

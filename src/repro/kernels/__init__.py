@@ -6,14 +6,23 @@
                     combine stage: SL::addSeq + batched removeMin).
 * radix_select.py — MSB-first radix threshold select (SL::moveHead top-k
                     without a full sort).
-* ops.py          — public jit'd wrappers, backend= pallas|jnp|auto.
+* lane_tick.py    — the fused lanes-in-grid tick megakernel: one
+                    pallas_call (grid = lanes) runs every lane's
+                    sort -> co-rank merge -> scatter -> extract pipeline
+                    (imported lazily by core/sharded.py — not re-exported
+                    here, it depends on repro.core).
+* ops.py          — public jit'd wrappers dispatching on the resolved
+                    KernelBackend config (jnp | pallas | pallas_interpret
+                    | auto, resolved once at config construction).
 * ref.py          — pure-jnp oracles; every kernel test asserts against
                     these across shape/dtype sweeps.
 """
 
-from repro.kernels.ops import (extract_k_bucketed, merge_sorted,
+from repro.kernels.ops import (BACKENDS, KernelBackend, extract_k_bucketed,
+                               merge_sorted, resolve_backend,
                                select_k_smallest, select_threshold,
                                sort_kvf)
 
-__all__ = ["extract_k_bucketed", "merge_sorted", "select_k_smallest",
+__all__ = ["BACKENDS", "KernelBackend", "extract_k_bucketed",
+           "merge_sorted", "resolve_backend", "select_k_smallest",
            "select_threshold", "sort_kvf"]

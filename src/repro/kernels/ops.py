@@ -1,18 +1,38 @@
 """Public jit'd wrappers over the Pallas kernels, with jnp fallbacks.
 
-Backend selection:
-* ``"pallas"`` — pl.pallas_call kernels (interpret=True off-TPU, so the
-  kernel *body* executes on CPU for correctness tests; on TPU the same
-  call lowers through Mosaic).
+Backend selection is a RESOLVED config value, not a per-call string: the
+supported path is ``PQConfig(backend=...)`` / ``EngineSpec(backend=...)``
+(``repro.core``), which call :func:`resolve_backend` ONCE at config
+construction and thread the frozen :class:`KernelBackend` through every
+op.  Resolving eagerly (instead of the old per-call
+``jax.default_backend()`` probe inside jit tracing) makes the backend
+part of the compiled program's cache key instead of ambient global
+state.  Spellings accepted by :func:`resolve_backend`:
+
+* ``"pallas"`` — pl.pallas_call kernels; Mosaic-compiled on TPU,
+  interpret-mode (kernel bodies execute as traced JAX ops) elsewhere.
+* ``"pallas_interpret"`` — pallas kernels with interpret=True forced,
+  regardless of the runtime backend (the CI equivalence legs).
 * ``"jnp"`` — pure-jnp reference path (the oracle, also the XLA-native
-  fallback).
-* ``"auto"`` — pallas on TPU, jnp elsewhere (CPU benchmarks should not pay
-  interpret-mode overhead).
+  fallback).  Never touches the JAX runtime at resolve time, so configs
+  built at import time stay XLA-flag-safe.
+* ``"auto"`` — pallas on TPU, jnp elsewhere (CPU benchmarks should not
+  pay interpret-mode overhead).  The ``PQ_BACKEND`` env var overrides
+  what "auto" resolves to (the CI pallas-interpret leg forces it).
+
+The per-call ``backend=`` string kwargs on the ops below are DEPRECATED
+aliases (they warn and re-resolve per call); in-repo call sites pass the
+config's ``KernelBackend`` and a CI grep gate keeps it that way
+(tests/test_factory.py::test_no_per_call_backend_strings).
 """
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
+import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,22 +48,80 @@ _I32 = jnp.int32
 
 _VAL_EXACT_BOUND = 1 << 24  # payloads ride through f32 matmuls
 
+#: spellings resolve_backend accepts (the config-level vocabulary)
+BACKENDS = ("jnp", "pallas", "pallas_interpret", "auto")
 
-def _interpret() -> bool:
-    """interpret=True executes kernel bodies in Python on CPU (validation);
-    on a real TPU backend this flips to False and Mosaic compiles them.
 
-    Evaluated lazily (NOT at import): jax.default_backend() initializes
-    the JAX runtime, and importers must be able to set XLA flags (device
-    count, platform) after `import repro.core` but before first use.
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """Resolved kernel-dispatch choice — frozen and hashable, so it rides
+    inside ``PQConfig`` as a static jit argument and the backend is part
+    of every compiled program's cache key.
+
+    ``kind``: "jnp" (reference path) or "pallas" (kernel path).
+    ``interpret``: pallas bodies execute via the interpreter (off-TPU
+    validation) instead of Mosaic.  Meaningless for kind="jnp".
     """
-    return jax.default_backend() != "tpu"
+
+    kind: str
+    interpret: bool = False
+
+    @property
+    def is_pallas(self) -> bool:
+        return self.kind == "pallas"
 
 
-def _resolve(backend: str) -> str:
+def resolve_backend(backend) -> KernelBackend:
+    """Validate + resolve a backend spelling to a :class:`KernelBackend`.
+
+    Called once at config construction (``PQConfig.__post_init__`` /
+    ``factory.resolved_base``).  "jnp" and "pallas_interpret" never touch
+    the JAX runtime, so module-level configs (repro.core.config.SMALL /
+    PRODUCTION) keep the import-then-set-XLA-flags contract; only
+    "pallas"/"auto" probe ``jax.default_backend()`` — and they probe it
+    HERE, eagerly, never inside jit tracing.
+    """
+    if isinstance(backend, KernelBackend):
+        return backend
+    if backend is None:
+        backend = "auto"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r} (have {BACKENDS})")
     if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    return backend
+        env = os.environ.get("PQ_BACKEND")
+        if env:
+            if env not in BACKENDS or env == "auto":
+                raise ValueError(
+                    f"PQ_BACKEND={env!r} must be one of "
+                    f"{tuple(b for b in BACKENDS if b != 'auto')}")
+            backend = env
+    if backend == "jnp":
+        return KernelBackend("jnp")
+    if backend == "pallas_interpret":
+        return KernelBackend("pallas", interpret=True)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        if backend == "jnp":
+            return KernelBackend("jnp")
+    # "pallas": Mosaic on TPU, interpret-mode elsewhere
+    return KernelBackend("pallas", interpret=jax.default_backend() != "tpu")
+
+
+def _coerce(backend) -> KernelBackend:
+    """Per-op backend arg -> KernelBackend.  ``None`` (the default)
+    resolves "auto" silently; strings are the deprecated per-call alias
+    and warn — the supported path is the config-level ``KernelBackend``.
+    """
+    if isinstance(backend, KernelBackend):
+        return backend
+    if backend is None:
+        return resolve_backend("auto")
+    warnings.warn(
+        "per-call backend= strings are deprecated; set backend on "
+        "PQConfig/EngineSpec (or pass ops.resolve_backend(...)) instead",
+        DeprecationWarning, stacklevel=3)
+    return resolve_backend(backend)
 
 
 def _check_val_bound(*val_arrays) -> None:
@@ -96,9 +174,7 @@ def searchsorted_last(a, v, side: str = "left"):
         # vmap).  Exact: pos = #{a < v} (left) or #{a <= v} (right).
         # The threshold is conservative — visible shapes may carry a
         # hidden vmap batch factor that multiplies the real work.
-        cmp = (a[..., None, :] < v[..., :, None] if side == "left"
-               else a[..., None, :] <= v[..., :, None])
-        return jnp.sum(cmp, axis=-1, dtype=_I32)
+        return _searchsorted_compare_all(a, v, side=side)
     # larger shapes: the binary-search scan's rounds already do rows*m
     # of work each, so they are throughput- not latency-bound and the
     # m log n total beats any compare-all (a two-level blocked search
@@ -110,6 +186,19 @@ def searchsorted_last(a, v, side: str = "left"):
     out = jax.vmap(
         lambda ar, vr: jnp.searchsorted(ar, vr, side=side))(af, vf)
     return out.reshape(lead + (m,)).astype(_I32)
+
+
+def _searchsorted_compare_all(a, v, side: str = "left"):
+    """Exact batched searchsorted as one broadcast compare + reduce.
+
+    pos = #{a < v} (left) / #{a <= v} (right) — no scan, no gather, no
+    scatter, so it lowers inside a Pallas kernel body (the megakernel's
+    :func:`kernel_safe_primitives` swaps this in unconditionally; the
+    public :func:`searchsorted_last` already picks it for small shapes,
+    which is what makes the swap bit-exact)."""
+    cmp = (a[..., None, :] < v[..., :, None] if side == "left"
+           else a[..., None, :] <= v[..., :, None])
+    return jnp.sum(cmp, axis=-1, dtype=_I32)
 
 
 def argsort_f32_last(keys, *, stable: bool = True):
@@ -126,14 +215,94 @@ def argsort_f32_last(keys, *, stable: bool = True):
     return jnp.argsort(_to_sortable_u32(keys), axis=-1, stable=stable)
 
 
-def sort_kvf(keys, vals, flags, *, backend: str = "auto"):
+def _argsort_network_stable(keys, *, stable: bool = True):
+    """Stable f32 argsort as a bitonic compare/select network — the
+    Mosaic-lowerable twin of :func:`argsort_f32_last` (no ``sort_p``
+    primitive, which Pallas kernel bodies cannot carry).
+
+    The network sorts (u32 key, index) pairs LEXICOGRAPHICALLY: the
+    index payload breaks every key tie, and because indices are a
+    permutation the order is total — so the network's output indices are
+    exactly the unique stable-argsort permutation, bit-identical to
+    ``jnp.argsort(u32, stable=True)`` regardless of how either handles
+    ties internally.  Rows pad to a power of two with (0xFFFFFFFF, n+i)
+    sentinels: no finite f32 (nor +inf, 0xFF800000) maps that high, and
+    the index tiebreak keeps even a hypothetical tie behind every real
+    element.  O(n log^2 n) compares — only ever used at the lane tick's
+    small widths (a_max / bucket_cap rows)."""
+    del stable  # the lexicographic network is always stable
+    n = keys.shape[-1]
+    lead = keys.shape[:-1]
+    if n == 1:
+        return jnp.zeros(lead + (1,), _I32)
+    np2 = 1 << (n - 1).bit_length()
+    full = lead + (np2,)
+    ku = _to_sortable_u32(keys)
+    ki = jax.lax.broadcasted_iota(_I32, full, len(full) - 1)
+    if np2 > n:
+        ku = jnp.concatenate(
+            [ku, jnp.full(lead + (np2 - n,), jnp.uint32(0xFFFFFFFF),
+                          ku.dtype)], axis=-1)
+    size = 2
+    while size <= np2:
+        stride = size // 2
+        while stride >= 1:
+            g = np2 // (2 * stride)
+            ks = ku.reshape(lead + (g, 2, stride))
+            vs = ki.reshape(lead + (g, 2, stride))
+            ka, kb = ks[..., 0, :], ks[..., 1, :]
+            ia, ib = vs[..., 0, :], vs[..., 1, :]
+            # each (2, stride) group sits inside one size-block (2*stride
+            # divides size), so the merge direction is constant per group
+            blk = jax.lax.broadcasted_iota(_I32, (g, stride), 0)
+            desc = ((blk * (2 * stride)) // size) % 2 == 1
+            gt = (ka > kb) | ((ka == kb) & (ia > ib))
+            swap = gt ^ desc
+            ku = jnp.stack([jnp.where(swap, kb, ka),
+                            jnp.where(swap, ka, kb)], axis=-2).reshape(full)
+            ki = jnp.stack([jnp.where(swap, ib, ia),
+                            jnp.where(swap, ia, ib)], axis=-2).reshape(full)
+            stride //= 2
+        size *= 2
+    return ki[..., :n]
+
+
+@contextlib.contextmanager
+def kernel_safe_primitives():
+    """Swap the two batched search/sort helpers for Pallas-kernel-safe
+    equivalents while a kernel body is being traced.
+
+    The lane-tick megakernel (kernels/lane_tick.py) runs the pqueue pass
+    chain INSIDE a ``pallas_call`` body; two of the primitives those
+    passes reach for do not belong in a kernel: ``jnp.searchsorted``'s
+    scan method (a while loop per round) and ``jnp.argsort`` (the
+    ``sort_p`` primitive).  Both have exact, gather/scan-free twins —
+    compare-all counting and the stable lexicographic bitonic network —
+    so swapping is a pure lowering choice, never a semantic one: results
+    stay bit-identical (asserted by tests/test_lane_megakernel.py).
+
+    Tracing of a ``pallas_call`` kernel happens eagerly at call time, so
+    wrapping the call is sufficient; the swap is restored before any
+    non-kernel code runs again."""
+    global searchsorted_last, argsort_f32_last
+    prev = (searchsorted_last, argsort_f32_last)
+    searchsorted_last = _searchsorted_compare_all
+    argsort_f32_last = _argsort_network_stable
+    try:
+        yield
+    finally:
+        searchsorted_last, argsort_f32_last = prev
+
+
+def sort_kvf(keys, vals, flags, *, backend=None):
     """Co-sort (keys, vals, flags) by key ascending along the last axis.
 
     Accepts any leading dims ([n], [rows, n], [lanes, rows, n], ...);
     the pallas path flattens the leading dims onto the bitonic kernel's
     rows grid (lane-major, not vmapped one lane at a time).
     """
-    if _resolve(backend) == "jnp":
+    bk = _coerce(backend)
+    if not bk.is_pallas:
         order = argsort_f32_last(keys)
         return (jnp.take_along_axis(keys, order, axis=-1),
                 jnp.take_along_axis(vals, order, axis=-1),
@@ -143,7 +312,7 @@ def sort_kvf(keys, vals, flags, *, backend: str = "auto"):
     ok, ov, of = bitonic_sort_kvf(keys.reshape(-1, n),
                                   vals.astype(_I32).reshape(-1, n),
                                   flags.astype(_I32).reshape(-1, n),
-                                  interpret=_interpret())
+                                  interpret=bk.interpret)
     return (ok.reshape(lead + (n,)), ov.reshape(lead + (n,)),
             of.reshape(lead + (n,)))
 
@@ -179,7 +348,7 @@ def _merge_sorted_corank(ak, av, af, bk, bv, bf):
 
 
 def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
-                 backend: str = "auto"):
+                 backend=None):
     """Merge two sorted INF-padded streams; ties resolve a-first.
 
     Accepts any equal leading dims (lane-major).  Pallas path: payloads
@@ -190,7 +359,8 @@ def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
     ``pallas_call`` (one compiled program, grid-prefixed — not one lane
     at a time).
     """
-    if _resolve(backend) == "jnp":
+    bk_ = _coerce(backend)
+    if not bk_.is_pallas:
         return _merge_sorted_corank(ak, av, af, bk, bv, bf)
     _check_val_bound(av, bv)
     total = ak.shape[-1] + bk.shape[-1]
@@ -200,11 +370,11 @@ def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
         raise ValueError(
             f"merge_sorted(pallas) needs an even total length to tile the "
             f"output; got n+m={total}. Pad one input by one slot or use "
-            f"backend='jnp'.")
+            f"the jnp backend.")
     while total % tile:
         tile = max(tile // 2, 1)
     kern = lambda *xs: merge_sorted_kvf(*xs, tile=tile,      # noqa: E731
-                                        interpret=_interpret())
+                                        interpret=bk_.interpret)
     lead = ak.shape[:-1]
     args = (ak, av.astype(_I32), af.astype(_I32),
             bk, bv.astype(_I32), bf.astype(_I32))
@@ -217,24 +387,28 @@ def merge_sorted(ak, av, af, bk, bv, bf, *, tile: int = 128,
     return kern(*args)
 
 
-def select_threshold(keys, k, *, backend: str = "auto"):
+def select_threshold(keys, k, *, backend=None):
     """(tau, n_below) with tau the k-th smallest of keys (INF-padded)."""
-    if _resolve(backend) == "jnp":
+    bk = _coerce(backend)
+    if not bk.is_pallas:
         return ref.ref_select_threshold(keys, k)
     return radix_select_threshold(keys, jnp.asarray(k, _I32),
-                                  interpret=_interpret())
+                                  interpret=bk.interpret)
 
 
-def _radix_select_sorted(flat, flatv, k, k_max: int, cand=None):
+def _radix_select_sorted(flat, flatv, k, k_max: int, cand=None, *,
+                         bk: KernelBackend):
     """Shared pallas selection core: radix threshold -> tie-rank split ->
     cumsum compaction -> bitonic sort of the k_max survivors.
 
     `cand` optionally masks elements that provably cannot be selected
     (splitter-directory pruning); it never changes the result, only trims
-    the tie-rank scan.  Returns (out_k sorted INF-padded, out_v -1-padded,
-    sel — the exact selected positions in `flat`).
+    the tie-rank scan.  `bk` is the caller's (pallas) KernelBackend —
+    threaded so the interpret choice resolved at config construction
+    reaches the inner kernels.  Returns (out_k sorted INF-padded, out_v
+    -1-padded, sel — the exact selected positions in `flat`).
     """
-    tau, n_below = select_threshold(flat, k, backend="pallas")
+    tau, n_below = select_threshold(flat, k, backend=bk)
     below = flat < tau
     eq = flat == tau
     if cand is not None:
@@ -248,7 +422,7 @@ def _radix_select_sorted(flat, flatv, k, k_max: int, cand=None):
     out_v = jnp.full((k_max,), -1, _I32).at[pos].set(flatv.astype(_I32),
                                                      mode="drop")
     zeros = jnp.zeros((k_max,), _I32)
-    out_k, out_v, _ = sort_kvf(out_k, out_v, zeros, backend="pallas")
+    out_k, out_v, _ = sort_kvf(out_k, out_v, zeros, backend=bk)
     return out_k, out_v, sel
 
 
@@ -293,22 +467,23 @@ def sorted_runs_gather(keys2d, vals2d, counts, out_len: int):
     return out_k, out_v, rk, rv
 
 
-def select_k_smallest(keys, vals, k, k_max: int, *, backend: str = "auto"):
+def select_k_smallest(keys, vals, k, k_max: int, *, backend=None):
     """The k smallest (key, val) pairs, sorted ascending, INF-padded to k_max.
 
     Pallas path: radix threshold (O(32 L)) + cumsum compaction + bitonic
     sort of the k_max survivors — avoids the O(L log L) full sort the jnp
     oracle performs.  k must be <= k_max; k_max a power of two for pallas.
     """
-    if _resolve(backend) == "jnp":
+    bk = _coerce(backend)
+    if not bk.is_pallas:
         return ref.ref_select_k(keys, vals, k, k_max)
     k = jnp.minimum(jnp.asarray(k, _I32), k_max)
-    out_k, out_v, _ = _radix_select_sorted(keys, vals, k, k_max)
+    out_k, out_v, _ = _radix_select_sorted(keys, vals, k, k_max, bk=bk)
     return out_k, out_v
 
 
 def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
-                       splitters=None, backend: str = "auto"):
+                       splitters=None, backend=None):
     """Extract (select + delete) the k smallest pairs from a bucket store.
 
     The parallel part of the PQ keeps keys in ``[NB, BCAP]`` buckets whose
@@ -354,7 +529,8 @@ def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
     total = counts.sum(axis=-1, dtype=_I32)
     k = jnp.minimum(jnp.minimum(jnp.asarray(k, _I32), total), k_max)
 
-    if _resolve(backend) == "jnp":
+    bk = _coerce(backend)
+    if not bk.is_pallas:
         out_k, out_v, rk, rv = sorted_runs_gather(keys2d, vals2d, counts,
                                                   k_max)
         j = jnp.arange(k_max, dtype=_I32)
@@ -375,7 +551,8 @@ def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
         raise ValueError(f"pallas extract_k_bucketed needs pow2 k_max, "
                          f"got {k_max}")
     if lead:
-        fn = functools.partial(_extract_k_bucketed_pallas_1, k_max=k_max)
+        fn = functools.partial(_extract_k_bucketed_pallas_1, k_max=k_max,
+                               bk=bk)
         flat = lambda x: x.reshape((-1,) + x.shape[len(lead):])  # noqa: E731
         if splitters is None:
             outs = jax.vmap(lambda a, b, c, d: fn(a, b, c, d, None))(
@@ -385,11 +562,11 @@ def extract_k_bucketed(keys2d, vals2d, counts, k, k_max: int, *,
                                 flat(k), flat(splitters))
         return tuple(o.reshape(lead + o.shape[1:]) for o in outs)
     return _extract_k_bucketed_pallas_1(keys2d, vals2d, counts, k,
-                                        splitters, k_max=k_max)
+                                        splitters, k_max=k_max, bk=bk)
 
 
 def _extract_k_bucketed_pallas_1(keys2d, vals2d, counts, k, splitters, *,
-                                 k_max: int):
+                                 k_max: int, bk: KernelBackend):
     """Single-store pallas extraction body (see extract_k_bucketed)."""
     nb, bc = keys2d.shape
     slot = jnp.arange(bc, dtype=_I32)[None, :]
@@ -408,7 +585,7 @@ def _extract_k_bucketed_pallas_1(keys2d, vals2d, counts, k, splitters, *,
     else:
         cand = None
     out_k, out_v, sel = _radix_select_sorted(
-        mk.reshape(-1), mv.reshape(-1), k, k_max, cand)
+        mk.reshape(-1), mv.reshape(-1), k, k_max, cand, bk=bk)
     # compact each row around the selected slots
     sel2 = sel.reshape(nb, bc)
     keep = live & ~sel2

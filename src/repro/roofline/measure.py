@@ -1,0 +1,82 @@
+"""Attach the roofline model to RUNNING programs (the bench bridge).
+
+hlo_stats.py can count a compiled module's FLOPs and HBM-proxy bytes;
+hw.py knows the target chip's peaks.  This module closes the loop the
+benches need: lower + compile the exact jitted tick program a bench is
+about to time, analyze its optimized HLO, and fold a measured wall time
+into an achieved-vs-peak record — "as fast as the hardware allows" as a
+number per BENCH_pq.json grid cell instead of a slogan.
+
+Honesty notes (DESIGN.md §13):
+
+* The peaks are the TPU v5e REFERENCE ROOF (hw.py) regardless of where
+  the bench ran; ``device`` records the actual runtime backend.  On the
+  CI CPU runners the achieved fractions are therefore tiny and only the
+  *static* fields (flops, bytes, arithmetic intensity, bound) are
+  machine-independent — the regression gate carries these records but
+  does not gate on them.
+* ``hbm_bytes_adj`` is hlo_stats' VMEM-residency-adjusted traffic proxy,
+  not a measured counter.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.roofline import hw
+from repro.roofline.hlo_stats import analyze
+
+
+def compiled_text_of(fn, *args) -> str:
+    """Optimized HLO of ``jit(fn)(*args)`` — lowered and compiled, never
+    executed (safe to pass live donated state: only avals are read)."""
+    import jax
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def roofline_record(hlo_text: str, wall_s: float, *, n_ticks: int = 1,
+                    device: Optional[str] = None) -> dict:
+    """Fold (program stats, measured wall seconds) into a roofline record.
+
+    ``wall_s`` must cover the WHOLE analyzed program (e.g. the scanned
+    ``tick_n`` over all ``n_ticks`` ticks — hlo_stats recovers scan trip
+    counts, so flops/bytes cover all ticks too)."""
+    return record_from_stats(analyze(hlo_text), wall_s, n_ticks=n_ticks,
+                             device=device)
+
+
+def record_from_stats(st, wall_s: float, *, n_ticks: int = 1,
+                      device: Optional[str] = None) -> dict:
+    """Same, from a pre-analyzed HloStats (the benches cache the analysis:
+    the compiled tick program is identical across p_add/key_dist cells)."""
+    import jax
+    wall = max(float(wall_s), 1e-12)
+    # traffic proxy: the fusion-boundary UPPER bound, not the
+    # VMEM-adjusted figure — PQ tick tensors all sit below the 8 MiB
+    # residency threshold, so hbm_bytes_adj degenerates to 0 and would
+    # report zero achieved bandwidth for a plainly memory-bound program.
+    # Both raw figures are recorded; the achieved/intensity numbers use
+    # the bound that actually discriminates.
+    ach_f = st.flops / wall
+    ach_b = st.hbm_bytes / wall
+    ai = st.flops / max(st.hbm_bytes, 1.0)
+    ridge = hw.PEAK_FLOPS / hw.HBM_BW
+    return {
+        "device": device or jax.default_backend(),
+        "peak_ref": "tpu_v5e",
+        "n_ticks": int(n_ticks),
+        "wall_s": round(wall, 6),
+        # static program facts (machine-independent)
+        "flops": st.flops,
+        "hbm_bytes": st.hbm_bytes,
+        "hbm_bytes_adj": st.hbm_bytes_adj,
+        "collective_bytes": st.coll_total,
+        "arith_intensity": round(ai, 4),
+        "ridge_intensity": round(ridge, 4),
+        "bound": "compute" if ai > ridge else "memory",
+        # achieved vs the reference roof (machine-dependent)
+        "achieved_flops_per_s": round(ach_f, 1),
+        "achieved_bytes_per_s": round(ach_b, 1),
+        "frac_peak_flops": round(ach_f / hw.PEAK_FLOPS, 8),
+        "frac_peak_bw": round(ach_b / hw.HBM_BW, 8),
+    }

@@ -134,6 +134,86 @@ def test_sharded_spec_matches_legacy_cfg():
 
 
 # ---------------------------------------------------------------------------
+# backend selection flows through the spec (the api_redesign contract)
+# ---------------------------------------------------------------------------
+
+def test_backend_resolves_once_into_config():
+    from repro.kernels.ops import KernelBackend
+
+    eng = make_engine(_spec("pqe", backend="pallas_interpret"))
+    assert eng.cfg.backend == KernelBackend("pallas", interpret=True)
+    # sharded: the backend must reach the LANE config the tick dispatches
+    # on, not just the wrapper
+    sh = make_engine(_spec("sharded", lanes=4, backend="jnp"))
+    assert sh.cfg.lane.backend == KernelBackend("jnp")
+    # already-resolved objects pass through untouched
+    bk = KernelBackend("pallas", interpret=True)
+    assert make_engine(_spec("pqe", backend=bk)).cfg.backend is bk
+
+
+def test_backend_unset_keeps_base_config_backend():
+    import dataclasses
+    from repro.kernels.ops import KernelBackend
+
+    base = dataclasses.replace(BASE, backend="pallas_interpret")
+    eng = make_engine(EngineSpec(engine="pqe", width=W, base=base))
+    assert eng.cfg.backend == KernelBackend("pallas", interpret=True)
+
+
+def test_invalid_backend_raises_at_construction():
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        make_engine(_spec("pqe", backend="cuda"))
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        PQConfig(a_max=W, r_max=W, backend="tpu")
+
+
+def test_pqconfig_canonicalizes_backend_string():
+    from repro.kernels.ops import KernelBackend
+
+    cfg = PQConfig(a_max=W, r_max=W, backend="pallas_interpret")
+    assert cfg.backend == KernelBackend("pallas", interpret=True)
+    # default is "auto"-resolved at construction, honoring PQ_BACKEND
+    assert isinstance(PQConfig(a_max=W, r_max=W).backend, KernelBackend)
+
+
+def test_no_per_call_backend_strings():
+    """Backend selection is config-only: no in-repo call site may pass a
+    backend="..." STRING to a kernel op (the deprecated per-call alias).
+    Textual scan like the legacy-constructor gate above, so a regressed
+    site fails CI even if nothing imports it.  src/repro/kernels/ is
+    exempt (the dispatch layer itself); config-level backend= kwargs
+    (PQConfig/EngineSpec) do not match — only op-call windows do."""
+    import re
+
+    ops_call = re.compile(
+        r"(?:sort_kvf|merge_sorted|select_threshold|select_k_smallest"
+        r"|extract_k_bucketed|searchsorted_last)\s*\(")
+    per_call = re.compile(r"backend\s*=\s*[\"']")
+    root = pathlib.Path(__file__).resolve().parents[1]
+    kernels_dir = root / "src" / "repro" / "kernels"
+    offenders = []
+    for sub in ("src", "tests", "benchmarks", "scripts", "examples"):
+        for path in sorted((root / sub).rglob("*.py")):
+            if kernels_dir in path.parents or path == pathlib.Path(
+                    __file__).resolve():
+                continue
+            text = path.read_text()
+            for m in ops_call.finditer(text):
+                # span to the call's closing paren (naive depth count is
+                # fine: op calls never nest another op call in-args)
+                depth, i = 1, m.end()
+                while i < len(text) and depth:
+                    depth += {"(": 1, ")": -1}.get(text[i], 0)
+                    i += 1
+                if per_call.search(text[m.start():i]):
+                    line = text.count("\n", 0, m.start()) + 1
+                    offenders.append(f"{path.relative_to(root)}:{line}")
+    assert not offenders, (
+        "per-call backend= strings remain (set backend on "
+        f"PQConfig/EngineSpec instead): {offenders}")
+
+
+# ---------------------------------------------------------------------------
 # deprecation of the legacy constructors
 # ---------------------------------------------------------------------------
 

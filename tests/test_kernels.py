@@ -13,6 +13,10 @@ from repro.kernels.bitonic import bitonic_sort_kvf
 from repro.kernels.merge_consume import merge_sorted_kvf
 from repro.kernels.radix_select import radix_select_threshold
 
+# resolved ONCE, config-style — per-call backend strings are deprecated
+_PALLAS = ops.resolve_backend("pallas")
+_JNP = ops.resolve_backend("jnp")
+
 
 # ---------------------------------------------------------------------------
 # bitonic co-sort
@@ -131,7 +135,7 @@ def test_select_k_smallest_composite():
     vals = np.arange(length, dtype=np.int32)
     for k in [0, 1, 17, 64]:
         gk, gv = ops.select_k_smallest(jnp.asarray(keys), jnp.asarray(vals),
-                                       k, k_max, backend="pallas")
+                                       k, k_max, backend=_PALLAS)
         ek, ev = ref.ref_select_k(jnp.asarray(keys), jnp.asarray(vals), k,
                                   k_max)
         np.testing.assert_array_equal(
@@ -190,7 +194,7 @@ def test_select_k_smallest_tie_split():
     vals = np.arange(8, dtype=np.int32)
     # k=5: 1, 2, 3 below tau=5; exactly TWO of the five 5.0s join
     gk, gv = ops.select_k_smallest(jnp.asarray(keys), jnp.asarray(vals),
-                                   5, 8, backend="pallas")
+                                   5, 8, backend=_PALLAS)
     np.testing.assert_array_equal(
         np.asarray(gk)[:5], [1.0, 2.0, 3.0, 5.0, 5.0])
     assert np.isinf(np.asarray(gk)[5:]).all()
@@ -206,9 +210,9 @@ def test_merge_sorted_rejects_odd_total():
         0, 10, 4), jnp.float32))
     za, zb = jnp.zeros(7, jnp.int32), jnp.zeros(4, jnp.int32)
     with pytest.raises(ValueError, match="even total"):
-        ops.merge_sorted(a, za, za, b, zb, zb, backend="pallas")
+        ops.merge_sorted(a, za, za, b, zb, zb, backend=_PALLAS)
     # jnp backend has no tiling constraint
-    ok, _, _ = ops.merge_sorted(a, za, za, b, zb, zb, backend="jnp")
+    ok, _, _ = ops.merge_sorted(a, za, za, b, zb, zb, backend=_JNP)
     assert ok.shape == (11,)
 
 
@@ -220,16 +224,17 @@ def test_merge_sorted_rejects_oversized_payloads():
     big = jnp.full((n,), 1 << 24, jnp.int32)
     z = jnp.zeros(n, jnp.int32)
     with pytest.raises(ValueError, match="2\\*\\*24"):
-        ops.merge_sorted(a, big, z, b, z, z, backend="pallas")
+        ops.merge_sorted(a, big, z, b, z, z, backend=_PALLAS)
     # in-bounds payloads pass
     ok_v = jnp.full((n,), (1 << 24) - 1, jnp.int32)
-    ops.merge_sorted(a, ok_v, z, b, z, z, backend="pallas")
+    ops.merge_sorted(a, ok_v, z, b, z, z, backend=_PALLAS)
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
 def test_extract_k_bucketed(backend):
     """Extraction == oracle k-smallest; survivors conserve the multiset
     and keep the range partition."""
+    backend = ops.resolve_backend(backend)
     rng = np.random.default_rng(11)
     nb, bc, k_max = 8, 16, 32
     splitters = np.full(nb, np.inf, np.float32)
